@@ -1,0 +1,63 @@
+"""Shared world-building for the FL benchmarks: constellation, connectivity,
+dataset, partitions, adapters, and the FedSpace regressor setup."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import connectivity as CN
+from repro.core.scheduler import make_scheduler
+from repro.data.fmow import FmowSpec, SyntheticFmow
+from repro.data.partition import iid_partition, noniid_partition
+from repro.data.pipeline import make_clients
+from repro.fl import fedspace_setup as FS
+from repro.fl.adapters import MlpFmowAdapter
+from repro.fl.simulation import run_simulation
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def build_world(*, K: int = 191, days: float = 5.0, num_train: int = 36_000,
+                num_val: int = 5_304, setting: str = "iid", seed: int = 0):
+    spec = CN.ConstellationSpec(num_satellites=K)
+    C = CN.connectivity_sets(spec, days=days)
+    data = SyntheticFmow(FmowSpec(num_train=num_train, num_val=num_val))
+    if setting == "iid":
+        parts = iid_partition(num_train, K, seed)
+    else:
+        parts = noniid_partition(data.train_zones, K, spec, days=days,
+                                 seed=seed)
+    adapter = MlpFmowAdapter(data, make_clients(parts))
+    return spec, C, data, adapter
+
+
+def build_fedspace_scheduler(adapter, *, I0=24, n_min=None, n_max=None,
+                             num_candidates=5000, regressor_kind="rf",
+                             pretrain_rounds=40, utility_samples=250,
+                             local_steps=16, client_lr=1.0,
+                             clients_per_round=24, seed=0):
+    traj = FS.pretrain_trajectory(adapter, rounds=pretrain_rounds,
+                                  clients_per_round=clients_per_round,
+                                  local_steps=local_steps,
+                                  client_lr=client_lr, seed=seed)
+    reg, diag = FS.fit_utility_regressor(adapter, traj,
+                                         kind=regressor_kind,
+                                         n_samples=utility_samples,
+                                         local_steps=local_steps,
+                                         client_lr=client_lr,
+                                         seed=seed)
+    sched = make_scheduler("fedspace", regressor=reg, I0=I0, n_min=n_min,
+                           n_max=n_max, num_candidates=num_candidates,
+                           seed=seed)
+    return sched, diag
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path

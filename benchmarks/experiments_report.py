@@ -1,0 +1,76 @@
+"""Regenerate the tables of EXPERIMENTS.md from results/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.experiments_report > tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    try:
+        with open(os.path.join(RES, name)) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:8.2f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.1f}m"
+    return f"{x * 1e6:6.0f}u"
+
+
+def dryrun_table(mesh="single", path="dryrun.json"):
+    rows = _load(path) or []
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | status | dominant | t_comp (s) | t_mem (s) | "
+           "t_coll (s) | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"{r.get('reason', r.get('error', ''))[:40]} | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['dominant_term']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | "
+            f"{(r.get('useful_flops_ratio') or 0):.3f} |")
+    return "\n".join(out)
+
+
+def table2():
+    rows = _load("table2.json") or []
+    out = ["| setting | scheme | days to 40% | best acc | updates | "
+           "aggregated | idle / total |", "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        d = r["days_to_target"]
+        out.append(
+            f"| {r['setting']} | {r['scheme']} | "
+            f"{d if d is not None else 'FAIL'} | {r['best_acc']:.3f} | "
+            f"{r['global_updates']} | {r['aggregated_gradients']} | "
+            f"{r['idle_connections']} / {r['total_connections']} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## Dry-run + roofline (single pod, 16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## Dry-run (multi-pod, 2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## Perf variants (results/dryrun_perf.json)\n")
+    print(dryrun_table("single", "dryrun_perf.json"))
+    print(dryrun_table("multi", "dryrun_perf.json"))
+    print("\n## Table 2 reproduction\n")
+    print(table2())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: wall-time per call of each Pallas kernel
+(interpret mode on CPU — correctness-path timing; TPU is the perf target)
+vs its pure-jnp oracle, over representative shapes. Emits
+name,us_per_call,derived CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.agg.kernel import weighted_aggregate
+from repro.kernels.agg.ref import weighted_aggregate_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows():
+    key = jax.random.PRNGKey(0)
+    out = []
+
+    # aggregation: M=191 updates over a 1M-param model slice
+    M, N = 191, 1_000_000
+    upd = jax.random.normal(key, (M, N), jnp.float32)
+    p = jnp.zeros((N,), jnp.float32)
+    w = jnp.full((M,), 1.0 / M)
+    t_k = _time(weighted_aggregate, p, upd, w, interpret=True)
+    t_r = _time(weighted_aggregate_ref, p, upd, w)
+    out.append(("kernel_agg_m191_n1m_interpret", t_k,
+                f"bytes={(M + 2) * N * 4 / 1e6:.0f}MB"))
+    out.append(("ref_agg_m191_n1m", t_r, "jnp_oracle"))
+
+    # rmsnorm: (4096, 4096)
+    x = jax.random.normal(key, (4096, 4096), jnp.bfloat16)
+    s = jnp.ones((4096,), jnp.bfloat16)
+    out.append(("kernel_rmsnorm_4kx4k_interpret",
+                _time(rmsnorm, x, s, interpret=True), "rows=256"))
+    out.append(("ref_rmsnorm_4kx4k", _time(rmsnorm_ref, x, s), "jnp_oracle"))
+
+    # flash attention: B1 H8 S1024 hd128 causal
+    q = jax.random.normal(key, (1, 8, 1024, 128), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 1024, 128))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 8, 1024, 128))
+    out.append(("kernel_flash_s1024_interpret",
+                _time(flash_attention, q, k, v, causal=True, bq=256, bk=256,
+                      interpret=True, iters=1), "causal"))
+    out.append(("ref_attention_s1024",
+                _time(attention_ref, q, k, v, causal=True), "jnp_oracle"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""§Roofline report: read results/dryrun.json (written by the dry-run sweep)
+and emit the per-(arch x shape x mesh) three-term roofline table with the
+dominant bottleneck and the MODEL_FLOPS / HLO_FLOPs usefulness ratio."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "dominant_term", "t_compute_s",
+        "t_memory_s", "t_collective_s", "useful_flops_ratio")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:6s} "
+                f"SKIP ({r.get('reason', '')[:48]})")
+    if r["status"] != "ok":
+        return (f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:6s} "
+                f"ERROR {r.get('error', '')[:60]}")
+    ufr = r.get("useful_flops_ratio")
+    return (f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['dominant_term']:10s} "
+            f"c={r['t_compute_s']:9.3e} m={r['t_memory_s']:9.3e} "
+            f"x={r['t_collective_s']:9.3e} useful={ufr:6.3f}" if ufr else "")
+
+
+def summarize(rows):
+    ok = [r for r in rows if r["status"] == "ok"]
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["dominant_term"], []).append(
+            (r["arch"], r["shape"], r["mesh"]))
+    return by_dom
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun.json"))
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.path)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    for r in rows:
+        if args.mesh and r["mesh"] != args.mesh:
+            continue
+        print(fmt_row(r))
+    dom = summarize(rows)
+    print("\ndominant-term counts:",
+          {k: len(v) for k, v in dom.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Benchmark driver — one entry per paper table/figure plus the kernel
+microbenchmarks and the roofline report. Prints ``name,us_per_call,derived``
+CSV rows (plus human-readable sections).
+
+Default mode is CPU-budget-friendly: Fig. 2 full-scale, Table 2 at a
+reduced horizon (sync capped; full runs live in results/table2.json via
+``python -m benchmarks.table2_training_time``), kernels in interpret mode,
+roofline from the recorded dry-run sweep.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def section(title):
+    print(f"\n# === {title} ===", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run the full Table-2 horizon (slow)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    # ------------------------------------------------ Fig. 2
+    section("Fig2: connectivity statistics (191 sats, 12 GS)")
+    from benchmarks import fig2_connectivity
+    t = time.time()
+    out = fig2_connectivity.run(days=5.0)
+    print(f"fig2_connectivity,{(time.time() - t) * 1e6:.0f},"
+          f"ci[{out['ci_min']}..{out['ci_max']}]_nk[{out['nk_min']:.0f}.."
+          f"{out['nk_max']:.0f}]")
+
+    # ------------------------------------------------ Table 2 / Fig 6 / 7
+    section("Table2: days to 40% top-1 (reduced horizon; full in "
+            "results/table2.json)")
+    from benchmarks.table2_training_time import run_table2
+    t = time.time()
+    max_days = 20.0 if args.full else 6.0
+    schemes = (["sync", "async", "fedbuff", "fedspace"] if args.full
+               else ["async", "fedbuff", "fedspace"])
+    rows, _ = run_table2(["noniid"], schemes, max_days=max_days)
+    for r in rows:
+        d = r["days_to_target"]
+        print(f"table2_{r['setting']}_{r['scheme']},"
+              f"{r['wall_s'] * 1e6:.0f},"
+              f"days_to_40pct={d if d is not None else 'FAIL'}")
+
+    # ------------------------------------------------ Fig. 7 summary
+    section("Fig7: staleness/idleness distribution (from Table-2 runs)")
+    for r in rows:
+        print(f"fig7_{r['scheme']},0,hist={r['staleness_hist']}"
+              f"_idle={r['idle_connections']}of{r['total_connections']}")
+
+    # ------------------------------------------------ kernels
+    section("Kernel microbenchmarks (interpret mode; TPU is the target)")
+    from benchmarks.kernels_micro import rows as krows
+    for name, us, derived in krows():
+        print(f"{name},{us:.0f},{derived}")
+
+    # ------------------------------------------------ roofline
+    section("Roofline (from the recorded dry-run sweep)")
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            drs = json.load(f)
+        ok = [r for r in drs if r["status"] == "ok"]
+        for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+            print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                  f"{r['time_s'] * 1e6:.0f},"
+                  f"dom={r['dominant_term']}"
+                  f"_c={r['t_compute_s']:.2e}_m={r['t_memory_s']:.2e}"
+                  f"_x={r['t_collective_s']:.2e}")
+        doms = {}
+        for r in ok:
+            doms[r["dominant_term"]] = doms.get(r["dominant_term"], 0) + 1
+        print(f"roofline_summary,0,{doms}")
+    else:
+        print("roofline_missing,0,run repro.launch.sweep first")
+
+    print(f"\n# total bench time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.ckpt.checkpoint import (CheckpointStore, load_pytree, save_pytree)

@@ -1,0 +1,88 @@
+"""Pytree checkpointing on npz (no external deps).
+
+Flattens a pytree to path-keyed arrays; restores with the original treedef.
+Also provides the bounded in-memory/off-memory trajectory store the utility
+estimator consumes ({w^0..w^Imax}, paper §3.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten_with_paths(tree))
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of `like` (shapes must match)."""
+    data = np.load(path)
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        leaves.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+class CheckpointStore:
+    """Version-indexed global-model store. Keeps the newest `keep_in_memory`
+    versions in RAM and (optionally) spills every `spill_every`-th version to
+    disk — the utility estimator needs w^{i-s} for s <= s_max, the FL server
+    needs old bases for stale satellites."""
+
+    def __init__(self, directory: Optional[str] = None,
+                 keep_in_memory: int = 32, spill_every: int = 0):
+        self.dir = directory
+        self.keep = keep_in_memory
+        self.spill_every = spill_every
+        self._mem: Dict[int, Any] = {}
+        self._disk: Dict[int, str] = {}
+        self._like = None
+
+    def put(self, version: int, params) -> None:
+        self._like = params
+        self._mem[version] = params
+        if self.dir and self.spill_every and version % self.spill_every == 0:
+            p = os.path.join(self.dir, f"w_{version:06d}.npz")
+            save_pytree(p, params)
+            self._disk[version] = p
+
+    def prune(self, min_referenced: int) -> None:
+        """Drop in-memory versions older than the oldest still-referenced
+        base (callers pass min over satellites' pending/buffered bases), but
+        never shrink below `keep` recent versions."""
+        if not self._mem:
+            return
+        newest = max(self._mem)
+        cutoff = min(min_referenced, newest - self.keep + 1)
+        for v in [v for v in self._mem if v < cutoff]:
+            del self._mem[v]
+
+    def get(self, version: int):
+        if version in self._mem:
+            return self._mem[version]
+        if version in self._disk:
+            return load_pytree(self._disk[version], self._like)
+        raise KeyError(f"version {version} evicted "
+                       f"(have {sorted(self._mem)[:4]}..)")
+
+    def versions(self) -> List[int]:
+        return sorted(set(self._mem) | set(self._disk))

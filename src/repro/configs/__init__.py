@@ -1,0 +1,2 @@
+from repro.configs.base import (INPUT_SHAPES, ModelConfig, ShapeConfig,
+                                StageSpec, get_config, list_configs, register)

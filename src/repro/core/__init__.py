@@ -1,0 +1,9 @@
+from repro.core.connectivity import (ConstellationSpec, connectivity_sets,
+                                     connectivity_stats)
+from repro.core.scheduler import (AsyncScheduler, FedBuffScheduler,
+                                  FedSpaceScheduler, PeriodicScheduler,
+                                  Scheduler, SyncScheduler, make_scheduler)
+from repro.core.staleness import (SatState, bootstrap_state, init_state,
+                                  simulate_candidates, simulate_window,
+                                  staleness_compensation, step)
+from repro.core.aggregation import aggregation_weights, apply_aggregation

@@ -1,0 +1,44 @@
+"""Staleness-compensated buffered aggregation (paper eq. 4):
+
+    w^{i+1} = w^i + sum_k  c(s_k)/C * g_k,    C = sum_k c(s_k)
+
+Operates on pytrees of flat per-satellite update stacks. The hot spot — the
+weighted reduction over the update buffer at full model size — is a Pallas
+TPU kernel (repro.kernels.agg); this module falls back to the pure-jnp
+reference away from TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import staleness_compensation
+
+
+def aggregation_weights(staleness, alpha: float = 0.5):
+    """Normalized c(s_k)/C weights. staleness: (M,) int array."""
+    c = staleness_compensation(jnp.asarray(staleness), alpha)
+    return c / jnp.maximum(jnp.sum(c), 1e-12)
+
+
+def apply_aggregation(global_params, update_stack, staleness, *,
+                      alpha: float = 0.5, server_lr: float = 1.0,
+                      use_kernel: bool = False):
+    """global_params: pytree; update_stack: pytree with leading buffer dim M
+    (stacked g_k); staleness: (M,) int32.
+
+    Returns updated params.
+    """
+    w = aggregation_weights(staleness, alpha) * server_lr
+
+    if use_kernel:
+        from repro.kernels.agg.ops import weighted_aggregate_tree
+        delta = weighted_aggregate_tree(update_stack, w)
+    else:
+        delta = jax.tree.map(
+            lambda u: jnp.tensordot(w.astype(jnp.float32),
+                                    u.astype(jnp.float32), axes=1),
+            update_stack)
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+        global_params, delta)

@@ -1,0 +1,158 @@
+"""Deterministic satellite-to-ground-station connectivity (paper §2.2).
+
+Replaces the `cote` simulator (unavailable offline) with a first-principles
+propagator: circular Keplerian orbits for a Planet-Flock-like constellation
+(sun-synchronous, ~475 km, 97.4 deg inclination) + Earth rotation for the
+ground stations + minimum-elevation-angle visibility. The output is the
+sequence of connectivity sets C = {C_0, C_1, ...} with period T0 (eq. 2):
+satellite k is in C_i if a link to ANY ground station is feasible at some
+time inside window i.
+
+Everything is deterministic given the constellation spec — the property
+FedSpace exploits (§3.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+MU = 3.986004418e14           # m^3/s^2
+R_EARTH = 6_371_000.0         # m
+OMEGA_EARTH = 7.2921159e-5    # rad/s
+
+# 12 Planet-like ground-station sites (lat, lon) — polar-heavy, as real
+# downlink networks are.
+DEFAULT_GROUND_STATIONS: List[Tuple[str, float, float]] = [
+    ("svalbard", 78.23, 15.39),
+    ("troll_antarctica", -72.01, 2.53),
+    ("inuvik", 68.32, -133.55),
+    ("fairbanks", 64.86, -147.85),
+    ("kiruna", 67.89, 20.41),
+    ("punta_arenas", -53.16, -70.91),
+    ("awarua_nz", -46.53, 168.38),
+    ("hartebeesthoek", -25.89, 27.69),
+    ("dubai", 25.20, 55.27),
+    ("bremen", 53.08, 8.80),
+    ("ohio", 40.37, -83.06),
+    ("seoul", 37.57, 126.98),
+]
+
+
+@dataclass(frozen=True)
+class ConstellationSpec:
+    num_satellites: int = 191
+    num_planes: int = 8
+    altitude_m: float = 475_000.0
+    inclination_deg: float = 97.4
+    iss_fraction: float = 0.5          # Flock 2e/2e' satellites on ISS orbit
+    iss_inclination_deg: float = 51.6
+    iss_altitude_m: float = 420_000.0
+    min_elevation_deg: float = 50.0
+    raan_spread_deg: float = 360.0
+    phase_jitter: float = 0.35     # fraction of slot spacing (deterministic)
+    seed: int = 17
+    ground_stations: Tuple[Tuple[str, float, float], ...] = tuple(
+        DEFAULT_GROUND_STATIONS)
+
+
+def _rot_z(a):
+    c, s = np.cos(a), np.sin(a)
+    z = np.zeros_like(a)
+    o = np.ones_like(a)
+    return np.stack([np.stack([c, -s, z], -1),
+                     np.stack([s, c, z], -1),
+                     np.stack([z, z, o], -1)], -2)
+
+
+def satellite_elements(spec: ConstellationSpec):
+    """Per-satellite (raan, inclination, phase) — deterministic."""
+    rng = np.random.default_rng(spec.seed)
+    K = spec.num_satellites
+    planes = np.arange(K) % spec.num_planes
+    raan = planes / spec.num_planes * np.deg2rad(spec.raan_spread_deg)
+    per_plane = np.ceil(K / spec.num_planes)
+    slot = np.arange(K) // spec.num_planes
+    phase = (slot / per_plane * 2 * np.pi
+             + planes * 0.5                      # inter-plane phasing
+             + rng.uniform(-1, 1, K) * spec.phase_jitter
+             * 2 * np.pi / per_plane)
+    inc = np.full(K, np.deg2rad(spec.inclination_deg))
+    n_iss = int(K * spec.iss_fraction)
+    iss_idx = rng.permutation(K)[:n_iss]
+    inc[iss_idx] = np.deg2rad(spec.iss_inclination_deg)
+    alt = np.full(K, spec.altitude_m)
+    alt[iss_idx] = spec.iss_altitude_m
+    return raan, inc, phase, alt
+
+
+def satellite_positions_eci(spec: ConstellationSpec, times: np.ndarray):
+    """ECI positions (T, K, 3) at times (s)."""
+    raan, inc, phase, alt = satellite_elements(spec)
+    r = R_EARTH + alt                             # (K,)
+    n = np.sqrt(MU / r ** 3)                      # mean motion rad/s (K,)
+    theta = times[:, None] * n + phase[None, :]   # (T, K)
+    x = r * np.cos(theta)
+    y = r * np.sin(theta)
+    ci, si = np.cos(inc), np.sin(inc)
+    cr, sr = np.cos(raan), np.sin(raan)
+    # orbit plane: rotate (x, y, 0) by inclination about x, then RAAN about z
+    xi = x
+    yi = y * ci
+    zi = y * si
+    xe = cr * xi - sr * yi
+    ye = sr * xi + cr * yi
+    return np.stack([xe, ye, np.broadcast_to(zi, xe.shape)], -1)
+
+
+def ground_positions_eci(spec: ConstellationSpec, times: np.ndarray):
+    """ECI positions (T, G, 3) of ground stations under Earth rotation."""
+    lats = np.deg2rad([g[1] for g in spec.ground_stations])
+    lons = np.deg2rad([g[2] for g in spec.ground_stations])
+    clat = np.cos(lats)
+    ecef = R_EARTH * np.stack(
+        [clat * np.cos(lons), clat * np.sin(lons), np.sin(lats)], -1)  # (G,3)
+    ang = OMEGA_EARTH * times                                          # (T,)
+    rot = _rot_z(ang)                                                  # (T,3,3)
+    return np.einsum("tij,gj->tgi", rot, ecef)
+
+
+def visibility(spec: ConstellationSpec, times: np.ndarray) -> np.ndarray:
+    """(T, K) bool: satellite visible from any GS above min elevation."""
+    sat = satellite_positions_eci(spec, times)     # (T,K,3)
+    gs = ground_positions_eci(spec, times)         # (T,G,3)
+    d = sat[:, :, None, :] - gs[:, None, :, :]     # (T,K,G,3)
+    up = gs / np.linalg.norm(gs, axis=-1, keepdims=True)
+    dn = np.linalg.norm(d, axis=-1)
+    sin_elev = np.einsum("tkgi,tgi->tkg", d, up) / np.maximum(dn, 1.0)
+    vis = sin_elev >= np.sin(np.deg2rad(spec.min_elevation_deg))
+    return vis.any(axis=2)
+
+
+def connectivity_sets(spec: ConstellationSpec, *, t0_s: float = 900.0,
+                      days: float = 5.0, substep_s: float = 60.0
+                      ) -> np.ndarray:
+    """C as a boolean matrix (num_windows, K): k in C_i iff a link is
+    feasible at any substep inside window i (paper uses T0 = 15 min)."""
+    num_windows = int(round(days * 86400.0 / t0_s))
+    per = int(round(t0_s / substep_s))
+    times = np.arange(num_windows * per) * substep_s
+    vis = visibility(spec, times)                  # (num_windows*per, K)
+    return vis.reshape(num_windows, per, -1).any(axis=1)
+
+
+def connectivity_stats(C: np.ndarray, windows_per_day: int = 96) -> dict:
+    """Fig. 2 statistics: |C_i| over time and per-satellite contacts/day."""
+    sizes = C.sum(axis=1)
+    days = C.shape[0] // windows_per_day
+    nk = C[:days * windows_per_day].reshape(days, windows_per_day, -1)
+    contacts_per_day = nk.sum(axis=1).mean(axis=0)   # (K,)
+    return {
+        "ci_min": int(sizes.min()), "ci_max": int(sizes.max()),
+        "ci_mean": float(sizes.mean()),
+        "nk_min": float(contacts_per_day.min()),
+        "nk_max": float(contacts_per_day.max()),
+        "nk_mean": float(contacts_per_day.mean()),
+        "sizes": sizes, "contacts_per_day": contacts_per_day,
+    }

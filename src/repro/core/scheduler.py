@@ -1,0 +1,127 @@
+"""Aggregation schedulers — the indicator a^i policies of Algorithm 1.
+
+Sync (eq. 5), Async (eq. 6), FedBuff (eq. 7), and FedSpace (§3), all behind
+one interface so the FL simulation engine (repro.fl.simulation) is
+policy-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import staleness as SS
+from repro.core.search import fedspace_search
+
+
+class Scheduler:
+    name = "base"
+
+    def reset(self):
+        pass
+
+    def decide(self, i: int, *, n_in_buffer: int, K: int, state: SS.SatState,
+               ig: int, connectivity: np.ndarray, status: float) -> bool:
+        raise NotImplementedError
+
+
+class SyncScheduler(Scheduler):
+    """Wait for every satellite (FedAvg round over the full constellation)."""
+    name = "sync"
+
+    def decide(self, i, *, n_in_buffer, K, **_):
+        return n_in_buffer >= K
+
+
+class AsyncScheduler(Scheduler):
+    """Aggregate whenever anything is in the buffer."""
+    name = "async"
+
+    def decide(self, i, *, n_in_buffer, **_):
+        return n_in_buffer > 0
+
+
+class FedBuffScheduler(Scheduler):
+    """Aggregate once the buffer reaches M (Nguyen et al. 2021)."""
+    name = "fedbuff"
+
+    def __init__(self, M: int = 96):
+        self.M = M
+
+    def decide(self, i, *, n_in_buffer, **_):
+        return n_in_buffer >= self.M
+
+
+class PeriodicScheduler(Scheduler):
+    """Beyond-paper baseline: aggregate every P windows regardless of buffer
+    content (a 'cron' server)."""
+    name = "periodic"
+
+    def __init__(self, period: int = 4):
+        self.period = period
+
+    def decide(self, i, *, n_in_buffer, **_):
+        return n_in_buffer > 0 and (i + 1) % self.period == 0
+
+
+class FedSpaceScheduler(Scheduler):
+    """The paper's scheduler: every I0 windows, random-search a schedule for
+    the next I0 windows against the utility regressor û, using the known
+    future connectivity and current protocol state (eq. 13)."""
+    name = "fedspace"
+
+    def __init__(self, regressor, *, I0: int = 24, n_min: int = None,
+                 n_max: int = None, num_candidates: int = 5000,
+                 s_max: int = 8, seed: int = 0):
+        self.regressor = regressor
+        self.I0 = I0
+        self.n_min = n_min       # None => inferred from û (paper §3.2)
+        self.n_max = n_max
+        self.num_candidates = num_candidates
+        self.s_max = s_max
+        self.seed = seed
+        self.reset()
+
+    def reset(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._schedule: Optional[np.ndarray] = None
+        self._window_start = -1
+
+    def decide(self, i, *, n_in_buffer, K, state, ig, connectivity, status,
+               **_):
+        offset = i % self.I0
+        if offset == 0 or self._schedule is None:
+            Cw = connectivity[i:i + self.I0]
+            if Cw.shape[0] < self.I0:   # pad the tail of the horizon
+                pad = np.zeros((self.I0 - Cw.shape[0], Cw.shape[1]), bool)
+                Cw = np.concatenate([Cw, pad], axis=0)
+            n_min, n_max = self.n_min, self.n_max
+            if n_min is None or n_max is None:
+                from repro.core.search import infer_n_range
+                inf_min, inf_max = infer_n_range(
+                    self.regressor, float(Cw.mean(axis=1).sum()) / self.I0
+                    * Cw.shape[1], self.I0, status, s_max=self.s_max,
+                    K=Cw.shape[1])
+                n_min = n_min if n_min is not None else inf_min
+                n_max = n_max if n_max is not None else inf_max
+            self._schedule = fedspace_search(
+                self._rng, Cw, state, ig, self.regressor, status,
+                n_min=n_min, n_max=n_max,
+                num_candidates=self.num_candidates, s_max=self.s_max)
+            self._window_start = i
+        a = bool(self._schedule[i - self._window_start])
+        return a and n_in_buffer > 0
+
+
+def make_scheduler(name: str, **kw) -> Scheduler:
+    if name == "sync":
+        return SyncScheduler()
+    if name == "async":
+        return AsyncScheduler()
+    if name == "fedbuff":
+        return FedBuffScheduler(M=kw.get("M", 96))
+    if name == "periodic":
+        return PeriodicScheduler(period=kw.get("period", 4))
+    if name == "fedspace":
+        return FedSpaceScheduler(kw.pop("regressor"), **kw)
+    raise KeyError(name)

@@ -1,0 +1,83 @@
+"""Random search over aggregation-schedule candidates (paper §3.2, eq. 13).
+
+The search space R ⊂ {0,1}^{I0} is restricted to schedules with
+n_agg ∈ [N_min, N_max] aggregations (the paper infers the range from û and
+uses |R| = 5000). Candidate evaluation is the vectorized protocol simulator
+(repro.core.staleness.simulate_candidates) — one vmapped scan instead of the
+paper's sequential Python loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import staleness as SS
+from repro.core.utility import featurize
+
+
+def random_candidates(rng: np.random.Generator, I0: int, n_min: int,
+                      n_max: int, R: int) -> np.ndarray:
+    """(R, I0) binary matrix; row r has n_r ~ U[n_min, n_max] ones."""
+    n_min = max(0, min(n_min, I0))
+    n_max = max(n_min, min(n_max, I0))
+    scores = rng.random((R, I0))
+    n_agg = rng.integers(n_min, n_max + 1, R)
+    order = np.argsort(scores, axis=1)
+    ranks = np.empty_like(order)
+    rows = np.arange(R)[:, None]
+    ranks[rows, order] = np.arange(I0)[None, :]
+    return (ranks < n_agg[:, None]).astype(np.int32)
+
+
+def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
+                     state: SS.SatState, ig: int, regressor, status: float,
+                     *, s_max: int = 8) -> np.ndarray:
+    """Predicted summed utility per candidate (eq. 13)."""
+    cands = jnp.asarray(candidates)
+    Cw = jnp.asarray(C_window)
+    _, _, infos = SS.simulate_candidates(Cw, cands, state,
+                                         jnp.int32(ig))
+    hist = np.asarray(infos["hist"])                     # (R, I0, s_max+1)
+    Rn, I0, F = hist.shape
+    feats = featurize(hist.reshape(Rn * I0, F), status)
+    util = regressor.predict(feats).reshape(Rn, I0)
+    agg_mask = candidates.astype(np.float32)
+    return (util * agg_mask).sum(axis=1)
+
+
+def infer_n_range(regressor, uploads_per_window: float, I0: int,
+                  status: float, *, s_max: int = 8, K: int = None,
+                  halfwidth: int = 4):
+    """Infer [N_min, N_max] from û, as the paper does: for each candidate
+    aggregation count n, approximate the per-aggregation staleness histogram
+    under even spacing (uploads split across n aggregations, mostly fresh),
+    and pick the count maximizing n * û(hist(n), T)."""
+    best_n, best_u = 1, -np.inf
+    # Cap at one aggregation per two windows: beyond that per-aggregation
+    # buffers thin out into the async regime the paper shows fails, and û
+    # extrapolates badly at counts it never sampled.
+    n_cap = max(1, I0 // 2)
+    total_uploads = uploads_per_window * I0
+    for n in range(1, n_cap + 1):
+        per = total_uploads / n
+        if K:
+            per = min(per, K)
+        hist = np.zeros(s_max + 1, np.float32)
+        hist[0] = per * 0.7          # even spacing: gradients mostly fresh
+        hist[1] = per * 0.3
+        u = n * float(regressor.predict(featurize(hist[None], status))[0])
+        if u > best_u:
+            best_n, best_u = n, u
+    return max(1, best_n - halfwidth), min(n_cap, best_n + halfwidth)
+
+
+def fedspace_search(rng: np.random.Generator, C_window: np.ndarray,
+                    state: SS.SatState, ig: int, regressor, status: float,
+                    *, n_min: int = 4, n_max: int = 8, num_candidates: int
+                    = 5000, s_max: int = 8) -> np.ndarray:
+    I0 = C_window.shape[0]
+    cands = random_candidates(rng, I0, n_min, n_max, num_candidates)
+    scores = score_candidates(cands, C_window, state, ig, regressor, status,
+                              s_max=s_max)
+    return cands[int(np.argmax(scores))]

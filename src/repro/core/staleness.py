@@ -1,0 +1,143 @@
+"""Staleness / idleness dynamics (paper eqs. 4, 9, 10) and the vectorized
+window simulator that scores candidate aggregation schedules.
+
+Protocol semantics (Algorithm 1 + Appendix A):
+  at each time index i, for every connected satellite k in C_i:
+    1. upload: if k holds a trained update (base version b_k), it enters the
+       GS buffer with staleness s_k = i_g - b_k *at aggregation time*;
+    2. if a^i = 1 the GS aggregates the buffer and increments i_g;
+    3. download: k receives the current global model; if its version is newer
+       than what k last received, k starts a new local round from it.
+  A connection is *idle* when the satellite has nothing to upload (no
+  aggregation happened between its two previous contacts — eq. 10).
+
+`simulate_window` is pure JAX and vmappable over candidate schedules — it is
+the inner loop of the FedSpace random search (eq. 13).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def staleness_compensation(s, alpha: float = 0.5):
+    """c_alpha(s) = (s+1)^(-alpha) (paper §2.3, after Xie et al. 2019)."""
+    return (s.astype(jnp.float32) + 1.0) ** (-alpha) \
+        if hasattr(s, "astype") else (s + 1.0) ** (-alpha)
+
+
+class SatState(NamedTuple):
+    """Per-satellite protocol state. Arrays of shape (..., K)."""
+    version: jnp.ndarray     # last global version received (-1 = never)
+    pending: jnp.ndarray     # base version of trained-but-unsent update (-1)
+    buffered: jnp.ndarray    # base version of update sitting in GS buffer (-1)
+
+
+def init_state(K: int) -> SatState:
+    m1 = jnp.full((K,), -1, jnp.int32)
+    return SatState(version=m1, pending=m1, buffered=m1)
+
+
+def bootstrap_state(K: int) -> SatState:
+    """All satellites already hold version 0 and have a pending update on it
+    (the GS seeds the constellation with w^0)."""
+    return SatState(version=jnp.zeros((K,), jnp.int32),
+                    pending=jnp.zeros((K,), jnp.int32),
+                    buffered=jnp.full((K,), -1, jnp.int32))
+
+
+def step(state: SatState, ig, connected, aggregate, *, s_max: int):
+    """One time index of the protocol.
+
+    Args:
+      state: SatState (K,)
+      ig: scalar int32 global round index
+      connected: (K,) bool — C_i
+      aggregate: scalar bool — a^i
+      s_max: staleness histogram clip
+
+    Returns: (new_state, new_ig, info) where info has:
+      hist: (s_max+1,) counts of aggregated gradients per clipped staleness
+      n_aggregated, n_idle, max_staleness (only meaningful when aggregate)
+    """
+    # 1. upload pending updates
+    has_pending = state.pending >= 0
+    uploads = connected & has_pending
+    buffered = jnp.where(uploads, state.pending, state.buffered)
+    pending = jnp.where(uploads, -1, state.pending)
+
+    # idle: connected, nothing to send, nothing new to fetch (eq. 10)
+    idle = connected & (~has_pending) & (state.version == ig)
+    n_idle = jnp.sum(idle.astype(jnp.int32))
+
+    # 2. aggregate — a no-op on an empty buffer (eq. 4 has nothing to sum;
+    # the global version must not advance spuriously)
+    in_buffer = buffered >= 0
+    aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
+    stale = jnp.where(in_buffer, ig - buffered, 0)
+    stale_c = jnp.clip(stale, 0, s_max)
+    hist = jnp.zeros((s_max + 1,), jnp.int32).at[stale_c].add(
+        (in_buffer & aggregate).astype(jnp.int32))
+    n_agg = jnp.sum((in_buffer & aggregate).astype(jnp.int32))
+    max_stale = jnp.max(jnp.where(in_buffer & aggregate, stale, 0))
+    new_ig = ig + aggregate.astype(jnp.int32)
+    buffered = jnp.where(aggregate, -1, buffered)
+
+    # 3. download
+    gets_new = connected & (state.version < new_ig)
+    version = jnp.where(gets_new, new_ig, state.version)
+    pending = jnp.where(gets_new, new_ig, pending)
+
+    info = {"hist": hist, "n_aggregated": n_agg, "n_idle": n_idle,
+            "max_staleness": max_stale}
+    return SatState(version, pending, buffered), new_ig, info
+
+
+def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8):
+    """Roll the protocol over a scheduling window.
+
+    Args:
+      C_window: (I0, K) bool future connectivity (deterministic!)
+      a: (I0,) {0,1} candidate aggregation schedule
+      state, ig: protocol state at window start
+
+    Returns (final_state, final_ig, infos) with infos stacked over I0:
+      hist (I0, s_max+1), n_aggregated (I0,), n_idle (I0,), ...
+    """
+    def body(carry, inp):
+        st, g = carry
+        c, ai = inp
+        st, g, info = step(st, g, c, ai.astype(bool), s_max=s_max)
+        return (st, g), info
+
+    (state, ig), infos = jax.lax.scan(
+        body, (state, ig), (C_window, a.astype(jnp.int32)))
+    return state, ig, infos
+
+
+# vmap over candidate schedules: a (R, I0) -> infos stacked over R.
+simulate_candidates = jax.vmap(simulate_window,
+                               in_axes=(None, 0, None, None),
+                               out_axes=0)
+
+
+# ---------------------------------------------------------------------------
+# Baseline aggregation indicators (paper §2.4) as predicates over GS state.
+
+
+def sync_indicator(n_in_buffer: int, K: int, **_) -> bool:
+    """a_sync = 1{R_i = K} (eq. 5)."""
+    return n_in_buffer >= K
+
+
+def async_indicator(n_in_buffer: int, **_) -> bool:
+    """a_async = 1{R_i != empty} (eq. 6)."""
+    return n_in_buffer > 0
+
+
+def fedbuff_indicator(n_in_buffer: int, M: int, **_) -> bool:
+    """a_fedbuff = 1{|R_i| >= M} (eq. 7)."""
+    return n_in_buffer >= M

@@ -1,0 +1,265 @@
+"""Utility-function estimation (paper §3.2, eq. 12).
+
+The GS (i) trains a model on a source dataset and stores the checkpoint
+trajectory {w^0..w^Imax}; (ii) samples (staleness vector s, training status
+T) pairs; (iii) measures the loss drop Δf of applying the staleness-vector's
+local updates to w^{i_start}; (iv) fits a regression model û(φ(s), T) ≈ Δf.
+
+Featurization φ: staleness vectors live in {-1,0,..,s_max}^K with K varying
+across constellations, so we use the *histogram* of staleness values (counts
+of gradients at each staleness 0..s_max) + total count + T. This is the same
+feature the schedule simulator (repro.core.staleness) emits, so the search
+can score candidates without materializing per-satellite vectors.
+
+Two regressors: a from-scratch random forest (paper-faithful: "a standard
+random forest regression") and a JAX MLP (beyond-paper alternative).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def featurize(hist: np.ndarray, status: float) -> np.ndarray:
+    """hist: (..., s_max+1) counts; status: scalar training status T.
+
+    Features: raw histogram + derived physical quantities the utility
+    actually depends on — total count (direction variance ~ 1/count under
+    eq. 4 normalization), staleness-compensated mass sum_s hist_s * c(s),
+    and mean staleness — plus T."""
+    hist = np.asarray(hist, np.float32)
+    total = hist.sum(axis=-1, keepdims=True)
+    s_vals = np.arange(hist.shape[-1], dtype=np.float32)
+    c = (s_vals + 1.0) ** -0.5
+    fresh_mass = (hist * c).sum(axis=-1, keepdims=True)
+    mean_stale = (hist * s_vals).sum(axis=-1, keepdims=True) \
+        / np.maximum(total, 1.0)
+    stat = np.broadcast_to(np.float32(status), total.shape)
+    return np.concatenate([hist, total, fresh_mass, mean_stale, stat],
+                          axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Random forest (numpy CART ensemble)
+
+
+@dataclass
+class _Node:
+    feature: int = -1
+    thresh: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class RandomForestRegressor:
+    def __init__(self, n_trees: int = 40, max_depth: int = 6,
+                 min_leaf: int = 4, feature_frac: float = 0.8,
+                 seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.feature_frac = feature_frac
+        self.seed = seed
+        self.trees: List[List[_Node]] = []
+
+    def _build(self, X, y, rng) -> List[_Node]:
+        nodes: List[_Node] = []
+
+        def grow(idx, depth) -> int:
+            node = _Node(value=float(y[idx].mean()))
+            nodes.append(node)
+            me = len(nodes) - 1
+            if depth >= self.max_depth or len(idx) < 2 * self.min_leaf \
+                    or np.ptp(y[idx]) < 1e-12:
+                return me
+            nf = max(1, int(X.shape[1] * self.feature_frac))
+            feats = rng.choice(X.shape[1], nf, replace=False)
+            best = (None, None, np.inf)
+            for f in feats:
+                xs = X[idx, f]
+                order = np.argsort(xs)
+                xs_s, ys_s = xs[order], y[idx][order]
+                csum = np.cumsum(ys_s)
+                csq = np.cumsum(ys_s ** 2)
+                n = len(ys_s)
+                for cut in range(self.min_leaf, n - self.min_leaf):
+                    if xs_s[cut] == xs_s[cut - 1]:
+                        continue
+                    ln, rn = cut, n - cut
+                    lsum, lsq = csum[cut - 1], csq[cut - 1]
+                    rsum, rsq = csum[-1] - lsum, csq[-1] - lsq
+                    sse = (lsq - lsum ** 2 / ln) + (rsq - rsum ** 2 / rn)
+                    if sse < best[2]:
+                        best = (f, (xs_s[cut] + xs_s[cut - 1]) / 2, sse)
+            if best[0] is None:
+                return me
+            f, t, _ = best
+            mask = X[idx, f] <= t
+            node.feature, node.thresh = int(f), float(t)
+            node.left = grow(idx[mask], depth + 1)
+            node.right = grow(idx[~mask], depth + 1)
+            return me
+
+        grow(np.arange(len(y)), 0)
+        return nodes
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        for _ in range(self.n_trees):
+            boot = rng.integers(0, len(y), len(y))
+            self.trees.append(self._build(X[boot], y[boot], rng))
+        return self
+
+    def _predict_tree(self, nodes: List[_Node], X) -> np.ndarray:
+        out = np.empty(len(X), np.float32)
+        for i, x in enumerate(X):
+            n = 0
+            while nodes[n].feature >= 0:
+                n = nodes[n].left if x[nodes[n].feature] <= nodes[n].thresh \
+                    else nodes[n].right
+            out[i] = nodes[n].value
+        return out
+
+    def predict(self, X) -> np.ndarray:
+        X = np.asarray(X, np.float32)
+        return np.mean([self._predict_tree(t, X) for t in self.trees],
+                       axis=0)
+
+
+# ---------------------------------------------------------------------------
+# JAX MLP regressor (beyond-paper alternative)
+
+
+class MLPRegressor:
+    def __init__(self, hidden: int = 64, steps: int = 800, lr: float = 1e-2,
+                 seed: int = 0):
+        self.hidden = hidden
+        self.steps = steps
+        self.lr = lr
+        self.seed = seed
+        self.params = None
+        self.mu = self.sd = self.ymu = self.ysd = None
+
+    def _apply(self, p, x):
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        h = jnp.tanh(h @ p["w2"] + p["b2"])
+        return (h @ p["w3"] + p["b3"])[..., 0]
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        self.mu, self.sd = X.mean(0), X.std(0) + 1e-6
+        self.ymu, self.ysd = y.mean(), y.std() + 1e-9
+        Xn = (X - self.mu) / self.sd
+        yn = (y - self.ymu) / self.ysd
+        k = jax.random.PRNGKey(self.seed)
+        ks = jax.random.split(k, 3)
+        F, H = X.shape[1], self.hidden
+        p = {"w1": jax.random.normal(ks[0], (F, H)) / np.sqrt(F),
+             "b1": jnp.zeros(H),
+             "w2": jax.random.normal(ks[1], (H, H)) / np.sqrt(H),
+             "b2": jnp.zeros(H),
+             "w3": jax.random.normal(ks[2], (H, 1)) / np.sqrt(H),
+             "b3": jnp.zeros(1)}
+
+        def loss(p):
+            return jnp.mean((self._apply(p, Xn) - yn) ** 2)
+
+        @jax.jit
+        def train(p):
+            def body(carry, _):
+                p, m = carry
+                g = jax.grad(loss)(p)
+                m = jax.tree.map(lambda m_, g_: 0.9 * m_ + g_, m, g)
+                p = jax.tree.map(lambda p_, m_: p_ - self.lr * m_, p, m)
+                return (p, m), None
+            m0 = jax.tree.map(jnp.zeros_like, p)
+            (p, _), _ = jax.lax.scan(body, (p, m0), None, length=self.steps)
+            return p
+
+        self.params = train(p)
+        return self
+
+    def predict(self, X) -> np.ndarray:
+        Xn = (np.asarray(X, np.float32) - self.mu) / self.sd
+        return np.asarray(self._apply(self.params, Xn)) * self.ysd + self.ymu
+
+
+# ---------------------------------------------------------------------------
+# Sample generation (eq. 12)
+
+
+def generate_utility_samples(
+        key,
+        checkpoints: List,                    # {w^0..w^Imax} pytrees
+        client_update_fn: Callable,           # (params, client_idx, rng)->upd
+        eval_loss_fn: Callable,               # params -> float
+        *,
+        num_clients: int,
+        n_samples: int = 200,
+        s_max: int = 8,
+        clients_per_sample: int = 48,
+        participate_p=None,
+        seed: int = 0):
+    """Returns (features (N,F), targets ΔF (N,)). Each sample: draw i_start
+    and a staleness vector over a client subset, apply eq. 12 against the
+    checkpoint trajectory and record the loss drop.
+
+    The participation fraction is drawn per sample from U(0.1, 1.0) so the
+    regressor sees the full range of aggregation sizes the scheduler will
+    encounter (a 2-gradient aggregation moves the model as far as a
+    90-gradient one under eq. 4's normalization, but with a far noisier
+    direction — the count-utility curve is exactly what û must learn).
+    Updates are normalized by the participating count, matching eq. 4."""
+    rng = np.random.default_rng(seed)
+    Imax = len(checkpoints) - 1
+    feats, targets = [], []
+    losses = {}
+
+    def loss_at(i):
+        if i not in losses:
+            losses[i] = float(eval_loss_fn(checkpoints[i]))
+        return losses[i]
+
+    for n in range(n_samples):
+        i_start = int(rng.integers(min(s_max, Imax - 1) if Imax > s_max
+                                   else 0, Imax))
+        clients = rng.choice(num_clients, min(clients_per_sample,
+                                              num_clients), replace=False)
+        s_vec = np.full(len(clients), -1, np.int64)
+        p_this = (rng.uniform(0.1, 1.0) if participate_p is None
+                  else participate_p)
+        part = rng.random(len(clients)) < p_this
+        s_vec[part] = rng.integers(0, min(s_max, i_start) + 1,
+                                   part.sum())
+        n_part = max(int(part.sum()), 1)
+        total_update = None
+        for ci, s in zip(clients, s_vec):
+            if s < 0:
+                continue
+            base = checkpoints[i_start - int(s)]
+            upd = client_update_fn(base, int(ci),
+                                   rng.integers(0, 2 ** 31))
+            upd = jax.tree.map(lambda x: x / n_part, upd)
+            total_update = upd if total_update is None else jax.tree.map(
+                lambda a, b: a + b, total_update, upd)
+        T = loss_at(i_start)
+        if total_update is None:
+            d_f = 0.0
+        else:
+            new = jax.tree.map(lambda w, u: w + u, checkpoints[i_start],
+                               total_update)
+            d_f = T - float(eval_loss_fn(new))
+        hist = np.bincount(s_vec[s_vec >= 0], minlength=s_max + 1
+                           )[:s_max + 1]
+        feats.append(featurize(hist, T))
+        targets.append(d_f)
+    return np.stack(feats), np.asarray(targets, np.float32)

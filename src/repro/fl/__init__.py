@@ -1,0 +1,3 @@
+from repro.fl.adapters import DenseNetFmowAdapter, MlpFmowAdapter
+from repro.fl.client import make_client_update
+from repro.fl.simulation import SimResult, run_simulation

@@ -1,0 +1,132 @@
+"""Model adapters: bind a model family to the FL engine (init/loss/eval +
+deterministic client batches). FedSpace schedules pytree updates, so any
+adapter — MLP, the paper's DenseNet, or a zoo transformer — plugs in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.fmow import NUM_CLASSES, SyntheticFmow
+from repro.data.pipeline import ClientDataset
+from repro.models import densenet as DN
+
+
+def _xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+class MlpFmowAdapter:
+    """Fast path: 62-class classification over feature vectors."""
+
+    name = "mlp"
+
+    def __init__(self, data: SyntheticFmow, clients: List[ClientDataset],
+                 hidden: int = 64):
+        self.data = data
+        self.clients = clients
+        self.hidden = hidden
+        self._X_train = data.features(np.arange(data.spec.num_train),
+                                      "train")
+        self._y_train = data.train_labels
+        self._X_val = data.features(np.arange(data.spec.num_val), "val")
+        self._y_val = data.val_labels
+
+    def init(self, key):
+        ks = jax.random.split(key, 2)
+        F, H = self._X_train.shape[1], self.hidden
+        return {
+            "w1": jax.random.normal(ks[0], (F, H)) * F ** -0.5,
+            "b1": jnp.zeros(H),
+            "w2": jax.random.normal(ks[1], (H, NUM_CLASSES)) * H ** -0.5,
+            "b2": jnp.zeros(NUM_CLASSES),
+        }
+
+    def apply(self, params, X):
+        h = jnp.tanh(X @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def loss(self, params, batch):
+        X, y = batch
+        return _xent(self.apply(params, X), y)
+
+    def client_batch(self, client_idx: int, round_rng: int, batch_size: int,
+                     num_batches: int):
+        idx = self.clients[client_idx].batches(round_rng, batch_size,
+                                               num_batches)
+        if idx.shape[1] == 0:
+            return None
+        return (jnp.asarray(self._X_train[idx]),
+                jnp.asarray(self._y_train[idx]))
+
+    def eval_batch(self, max_n: int = 2048):
+        return jnp.asarray(self._X_val[:max_n]), \
+            jnp.asarray(self._y_val[:max_n])
+
+    def accuracy(self, params, max_n: int = 2048) -> float:
+        X, y = self.eval_batch(max_n)
+        pred = jnp.argmax(self.apply(params, X), axis=-1)
+        return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+    def val_loss(self, params, max_n: int = 2048) -> float:
+        X, y = self.eval_batch(max_n)
+        return float(self.loss(params, (X, y)))
+
+
+class DenseNetFmowAdapter(MlpFmowAdapter):
+    """The paper's model family: DenseNet-style CNN over images, optional
+    frozen prefix (transfer learning, §4.1)."""
+
+    name = "densenet"
+
+    def __init__(self, data: SyntheticFmow, clients: List[ClientDataset],
+                 growth: int = 8, blocks=(2, 2, 2), stem: int = 16,
+                 frozen_blocks: int = 0, val_n: int = 1024):
+        self.data = data
+        self.clients = clients
+        self.growth, self.blocks, self.stem = growth, blocks, stem
+        self.frozen_blocks = frozen_blocks
+        self._y_train = data.train_labels
+        self._val_X = jnp.asarray(
+            data.images(np.arange(min(val_n, data.spec.num_val)), "val"))
+        self._val_y = jnp.asarray(
+            data.val_labels[:min(val_n, data.spec.num_val)])
+
+    def init(self, key):
+        return DN.densenet_init(key, num_classes=NUM_CLASSES,
+                                growth=self.growth, blocks=self.blocks,
+                                stem=self.stem)
+
+    def trainable_mask(self, params):
+        return DN.frozen_mask(params, self.frozen_blocks)
+
+    def apply(self, params, X):
+        return DN.densenet_apply(params, X)
+
+    def loss(self, params, batch):
+        X, y = batch
+        return _xent(self.apply(params, X), y)
+
+    def client_batch(self, client_idx, round_rng, batch_size, num_batches):
+        idx = self.clients[client_idx].batches(round_rng, batch_size,
+                                               num_batches)
+        if idx.shape[1] == 0:
+            return None
+        imgs = np.stack([self.data.images(row, "train") for row in idx])
+        return jnp.asarray(imgs), jnp.asarray(self._y_train[idx])
+
+    def accuracy(self, params, max_n: int = 1024) -> float:
+        pred = jnp.argmax(self.apply(params, self._val_X[:max_n]), axis=-1)
+        return float(jnp.mean((pred == self._val_y[:max_n]).astype(
+            jnp.float32)))
+
+    def val_loss(self, params, max_n: int = 1024) -> float:
+        return float(self.loss(params,
+                               (self._val_X[:max_n], self._val_y[:max_n])))

@@ -1,0 +1,36 @@
+"""Satellite-side local training (paper eq. 3): E SGD steps from the last
+received global model; the update g_k = w_k^E - w_k^0 is held until the next
+ground-station contact."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_client_update(adapter, *, local_steps: int, lr: float,
+                       trainable_mask=None):
+    """Returns update_fn(base_params, batches) -> g_k (pytree delta)."""
+
+    @jax.jit
+    def update_fn(params, batches):
+        def body(p, batch):
+            g = jax.grad(adapter.loss)(p, batch)
+            if trainable_mask is not None:
+                g = jax.tree.map(lambda g_, m: g_ * m, g, trainable_mask)
+            p = jax.tree.map(lambda w, g_: w - lr * g_, p, g)
+            return p, None
+
+        final, _ = jax.lax.scan(body, params, batches)
+        return jax.tree.map(lambda a, b: a - b, final, params)
+
+    def client_update(base_params, client_idx: int, round_rng: int,
+                      batch_size: int = 32):
+        batch = adapter.client_batch(client_idx, round_rng, batch_size,
+                                     local_steps)
+        if batch is None:      # satellite with an empty shard
+            return jax.tree.map(jnp.zeros_like, base_params)
+        return update_fn(base_params, batch)
+
+    return client_update

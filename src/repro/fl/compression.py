@@ -1,0 +1,71 @@
+"""Uplink update compression (beyond-paper extension).
+
+The paper (§5, Related Works) notes communication-efficient FL — gradient
+compression — is orthogonal to the scheduling contribution and "can be
+combined together". This module provides the two standard primitives for
+the satellite uplink (the scarce resource the whole paper is about) and a
+simulation hook:
+
+  * top-k sparsification (keep the k largest-magnitude entries per leaf);
+  * symmetric int8 quantization with per-leaf scale.
+
+Both are applied satellite-side to g_k before upload and inverted GS-side
+before the eq.-4 aggregation; the compression ratio feeds the downlink
+budget accounting.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedLeaf(NamedTuple):
+    values: jnp.ndarray     # int8 quantized kept values
+    indices: jnp.ndarray    # flat indices of kept entries (int32)
+    scale: jnp.ndarray      # () f32 dequant scale
+    shape: tuple
+
+
+def compress_topk_int8(update, k_frac: float = 0.1):
+    """Returns (compressed pytree, bytes_compressed, bytes_raw)."""
+    total_raw = 0
+    total_comp = 0
+
+    def one(u):
+        nonlocal total_raw, total_comp
+        flat = u.reshape(-1).astype(jnp.float32)
+        n = flat.shape[0]
+        k = max(1, int(n * k_frac))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = flat[idx]
+        scale = jnp.maximum(jnp.max(jnp.abs(kept)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+        total_raw += n * 4
+        total_comp += k * (1 + 4)   # int8 value + int32 index
+        return CompressedLeaf(values=q, indices=idx.astype(jnp.int32),
+                              scale=scale, shape=tuple(u.shape))
+
+    comp = jax.tree.map(one, update)
+    return comp, total_comp, total_raw
+
+
+def decompress(comp):
+    def one(c):
+        n = 1
+        for d in c.shape:
+            n *= d
+        flat = jnp.zeros((n,), jnp.float32).at[c.indices].set(
+            c.values.astype(jnp.float32) * c.scale)
+        return flat.reshape(c.shape)
+
+    return jax.tree.map(one, comp,
+                        is_leaf=lambda x: isinstance(x, CompressedLeaf))
+
+
+def roundtrip(update, k_frac: float = 0.1):
+    """Compress + decompress — what the GS sees after an uplink with
+    top-k/int8 compression. Returns (lossy update, compression ratio)."""
+    comp, b_c, b_r = compress_topk_int8(update, k_frac)
+    return decompress(comp), b_r / max(b_c, 1)

@@ -1,0 +1,71 @@
+"""Wiring for FedSpace's first phase (paper §3.2, Fig. 5): pretrain a source
+trajectory, generate (staleness-vector, status) -> Δf samples against it
+(eq. 12), and fit the utility regressor û used by the schedule search.
+
+The paper uses the same task's dataset as the source D^s (its §4.3
+simplification); we do the same — the adapter provides both the source
+trajectory training and the client updates.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utility import (MLPRegressor, RandomForestRegressor,
+                                generate_utility_samples)
+from repro.fl.client import make_client_update
+
+
+def pretrain_trajectory(adapter, *, rounds: int = 40, clients_per_round: int
+                        = 16, local_steps: int = 4, client_lr: float = 0.05,
+                        seed: int = 0) -> List:
+    """Simulated ideal-FL trajectory {w^0..w^Imax} on the source dataset:
+    each round aggregates fresh updates from a random client subset (no
+    connectivity constraints — this runs entirely at the GS)."""
+    rng = np.random.default_rng(seed)
+    params = adapter.init(jax.random.PRNGKey(seed))
+    client_update = make_client_update(adapter, local_steps=local_steps,
+                                       lr=client_lr)
+    K = len(adapter.clients)
+    traj = [params]
+    for r in range(rounds):
+        picks = rng.choice(K, min(clients_per_round, K), replace=False)
+        updates = [client_update(params, int(k), round_rng=10_000 + r)
+                   for k in picks]
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+        delta = jax.tree.map(lambda u: jnp.mean(u, axis=0), stack)
+        params = jax.tree.map(lambda p, d: p + d, params, delta)
+        traj.append(params)
+    return traj
+
+
+def fit_utility_regressor(adapter, trajectory, *, kind: str = "rf",
+                          n_samples: int = 300, s_max: int = 8,
+                          clients_per_sample: int = 48,
+                          local_steps: int = 4, client_lr: float = 0.05,
+                          seed: int = 0):
+    client_update = make_client_update(adapter, local_steps=local_steps,
+                                       lr=client_lr)
+
+    def upd_fn(base, ci, rng_int):
+        # eq. 4 normalization by participating count happens inside
+        # generate_utility_samples
+        return client_update(base, ci, round_rng=int(rng_int))
+
+    X, y = generate_utility_samples(
+        jax.random.PRNGKey(seed), trajectory, upd_fn,
+        lambda p: adapter.val_loss(p),
+        num_clients=len(adapter.clients), n_samples=n_samples, s_max=s_max,
+        clients_per_sample=clients_per_sample, seed=seed)
+    reg = (RandomForestRegressor(seed=seed) if kind == "rf"
+           else MLPRegressor(seed=seed))
+    reg.fit(X, y)
+    # in-sample fit quality (diagnostic)
+    pred = reg.predict(X)
+    ss = 1.0 - np.sum((pred - y) ** 2) / max(np.sum((y - y.mean()) ** 2),
+                                             1e-12)
+    return reg, {"r2_in_sample": float(ss), "n": len(y),
+                 "y_mean": float(y.mean()), "y_std": float(y.std())}

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots:
+
+  agg/              staleness-weighted buffered aggregation (paper eq. 4)
+  rmsnorm/          RMSNorm over the model dim
+  flash_attention/  causal / sliding-window flash attention (GQA)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), and ref.py (pure-jnp oracle). On CPU they run with
+interpret=True; TPU is the compile target.
+"""
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: staleness-compensated buffered aggregation (eq. 4).
+
+    new_w[n] = w[n] + sum_m weights[m] * updates[m, n]
+
+The server hot spot: at aggregation time the GS reduces a buffer of M
+satellite updates (M up to the constellation size) over the full flat model
+(N = tens-to-hundreds of millions). The reduction is memory-bound; we tile
+the parameter axis into VMEM blocks and stream the (M, BN) update panel
+HBM->VMEM once, accumulating in f32.
+
+Grid: (N // BN,). BlockSpecs keep `weights` resident (it is tiny) and march
+`updates`/`params` along the parameter axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16_384
+
+
+def _agg_kernel(w_ref, upd_ref, p_ref, out_ref):
+    """w: (M,1) f32; upd: (M, BN); p: (BN,); out: (BN,)."""
+    upd = upd_ref[...].astype(jnp.float32)          # (M, BN)
+    w = w_ref[...].astype(jnp.float32)              # (M, 1)
+    acc = jnp.sum(upd * w, axis=0)                  # (BN,)
+    out_ref[...] = (p_ref[...].astype(jnp.float32) + acc).astype(
+        out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def weighted_aggregate(params_flat, updates, weights, *,
+                       block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """params_flat: (N,), updates: (M, N), weights: (M,) -> (N,)."""
+    n = params_flat.shape[0]
+    m = updates.shape[0]
+    pad = (-n) % block
+    if pad:
+        params_flat = jnp.pad(params_flat, (0, pad))
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    np_ = params_flat.shape[0]
+    grid = (np_ // block,)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),          # weights
+            pl.BlockSpec((m, block), lambda i: (0, i)),      # updates panel
+            pl.BlockSpec((block,), lambda i: (i,)),          # params block
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), params_flat.dtype),
+        interpret=interpret,
+    )(weights[:, None], updates, params_flat)
+    return out[:n] if pad else out

@@ -1,0 +1,38 @@
+"""jit'd public API for the aggregation kernel: flat and pytree forms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.agg.kernel import weighted_aggregate
+from repro.kernels.agg.ref import weighted_aggregate_ref
+
+
+def aggregate_flat(params_flat, updates, weights, *, interpret=None):
+    if interpret is None:
+        interpret = not on_tpu()
+    return weighted_aggregate(params_flat, updates, weights,
+                              interpret=interpret)
+
+
+def weighted_aggregate_tree(update_stack, weights, *, interpret=None):
+    """update_stack: pytree with leading buffer dim M -> weighted sum tree
+    (flattens each leaf through the kernel)."""
+    def one(u):
+        m = u.shape[0]
+        flat = u.reshape(m, -1)
+        zero = jnp.zeros((flat.shape[1],), jnp.float32)
+        out = aggregate_flat(zero, flat, weights, interpret=interpret)
+        return out.reshape(u.shape[1:])
+    return jax.tree.map(one, update_stack)
+
+
+def aggregate_params_tree(params, update_stack, weights, *, interpret=None):
+    """params + sum_m w_m * updates[m] per leaf, through the kernel."""
+    def one(p, u):
+        m = u.shape[0]
+        out = aggregate_flat(p.reshape(-1).astype(jnp.float32),
+                             u.reshape(m, -1), weights, interpret=interpret)
+        return out.reshape(p.shape).astype(p.dtype)
+    return jax.tree.map(one, params, update_stack)

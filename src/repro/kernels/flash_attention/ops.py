@@ -1,0 +1,23 @@
+"""jit'd public API for flash attention, in the model's (B, S, H, hd)
+layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, window=0, bq=512, bk=512,
+                         interpret=None):
+    """q: (B, S, H, hd); k, v: (B, T, K, hd) — the transformer-stack layout.
+    Transposes to (B, H, S, hd) for the kernel."""
+    if interpret is None:
+        interpret = not on_tpu()
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window, bq=bq,
+                          bk=bk, interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

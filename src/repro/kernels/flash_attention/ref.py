@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, Sq, hd); k, v: (B, K, Sk, hd). Materialized-softmax oracle
+    with GQA, causal and sliding-window masking."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    Sk = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, kf) * hd ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

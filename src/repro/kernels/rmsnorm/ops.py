@@ -1,0 +1,12 @@
+"""jit'd public API for the RMSNorm kernel."""
+from __future__ import annotations
+
+from repro.kernels import on_tpu
+from repro.kernels.rmsnorm.kernel import rmsnorm as _kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, *, interpret=None):
+    if interpret is None:
+        interpret = not on_tpu()
+    return _kernel(x, scale, eps, interpret=interpret)

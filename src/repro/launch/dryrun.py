@@ -1,0 +1,168 @@
+import os
+import sys
+_flags = "--xla_force_host_platform_device_count=512"
+if "--strict-dtypes" in sys.argv:
+    # keep bf16 collectives in bf16 (XLA's excess-precision pass otherwise
+    # promotes convert->psum->convert chains back to f32; TPU backends keep
+    # native bf16 all-reduces) — used by the §Perf agg hillclimb
+    sys.argv.remove("--strict-dtypes")
+    _flags += " --xla_allow_excess_precision=false"
+os.environ["XLA_FLAGS"] = _flags
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) combination on
+the production meshes, record memory/cost/collective analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh single --out results/dryrun.json
+
+Each invocation runs one combination in a fresh process (XLA device-count
+flags lock at first jax init; a fresh process also bounds compile memory) and
+appends its record to the JSON results file.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.launch import input_specs as IS
+from repro.launch import roofline as RL
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            num_micro=None, q_chunk=512, moe_groups=1,
+            save_hlo=None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "skipped", "time_s": 0.0}
+    if not IS.applicable(cfg, shape):
+        rec["reason"] = "long_500k requires sub-quadratic decode (DESIGN.md)"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = 512 if mesh_kind == "multi" else 256
+    try:
+        with mesh:
+            fn, args, in_sh, out_sh = ST.build(cfg, shape, mesh,
+                                               num_micro=num_micro,
+                                               q_chunk=q_chunk,
+                                               moe_groups=moe_groups)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        terms = RL.analyze(hlo, chips)
+        terms["xla_cost_flops_unscaled"] = float(cost.get("flops", 0.0))
+        params_shape = args[0]
+        n_total = RL.count_params(params_shape)
+        n_active = RL.count_active_params(cfg, params_shape)
+        mflops = RL.model_flops(cfg, shape, n_active, n_total)
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "params_total": n_total,
+            "params_active": n_active,
+            "model_flops": mflops,
+            "useful_flops_ratio": (mflops / terms["hlo_flops"]
+                                   if terms["hlo_flops"] else None),
+            **terms,
+        })
+        if mem is not None:
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            }
+        dom = max(("compute", "memory", "collective"),
+                  key=lambda k: rec[f"t_{k}_s"])
+        rec["dominant_term"] = dom
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a bug report
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["time_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def append_result(path: str, rec: dict):
+    import fcntl
+    lockpath = path + ".lock"
+    lock = open(lockpath, "w")
+    fcntl.flock(lock, fcntl.LOCK_EX)
+    try:
+        _append_locked(path, rec)
+    finally:
+        fcntl.flock(lock, fcntl.LOCK_UN)
+        lock.close()
+
+
+def _append_locked(path: str, rec: dict):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = []
+    data = [r for r in data
+            if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                    and r["mesh"] == rec["mesh"])]
+    data.append(rec)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--num-micro", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--moe-groups", type=int, default=1,
+                    help="-1 = auto (one routing group per sequence); "
+                         "-2 = expert-parallel shard_map")
+    ap.add_argument("--remat-attn", action="store_true",
+                    help="checkpoint the per-q-chunk attention body")
+    ap.add_argument("--opt-decode", action="store_true",
+                    help="model-shard cache feature dims + sharded-vocab "
+                         "argmax (EXPERIMENTS.md hillclimb B)")
+    ap.add_argument("--variant", default="",
+                    help="tag appended to the record key")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    from repro.models.attention import remat_attention_chunks
+    if args.opt_decode:
+        from repro import sharding as _Sh
+        _Sh.DECODE_OPT = True
+    with remat_attention_chunks(args.remat_attn):
+        rec = run_one(args.arch, args.shape, args.mesh,
+                      num_micro=args.num_micro, q_chunk=args.q_chunk,
+                      moe_groups=args.moe_groups, save_hlo=args.save_hlo)
+    if args.variant:
+        rec["shape"] = rec["shape"] + "+" + args.variant
+    append_result(args.out, rec)
+    drop = {"traceback"}
+    print(json.dumps({k: v for k, v in rec.items() if k not in drop},
+                     indent=1))
+    if rec["status"] == "error":
+        print(rec.get("traceback", ""))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import VISION_DIM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        st = S - cfg.num_image_tokens
+        return {
+            "tokens": SDS((B, st), jnp.int32),
+            "labels": SDS((B, st), jnp.int32),
+            "image_embeds": SDS((B, cfg.num_image_tokens, VISION_DIM),
+                                jnp.float32),
+        }
+    if cfg.is_encoder_decoder:
+        return {
+            "tokens": SDS((B, cfg.decoder_prompt), jnp.int32),
+            "labels": SDS((B, cfg.decoder_prompt), jnp.int32),
+            "frames": SDS((B, S, cfg.d_model), jnp.float32),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_token_spec(cfg: ModelConfig, shape: ShapeConfig):
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Whether this (arch, shape) pair runs (DESIGN.md long_500k policy)."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False
+    return True

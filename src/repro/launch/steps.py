@@ -1,0 +1,377 @@
+"""pjit-able step functions: train (AdamW + microbatch accumulation + remat),
+prefill, and decode, with their sharding spec trees for a given mesh.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+combination, and the same code paths the CPU smoke tests execute on a 1x1
+mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as Sh
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import input_specs as IS
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update, apply_updates, \
+    clip_by_global_norm
+
+
+def default_num_micro(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Pick a microbatch count so each data shard sees ~1 sequence per
+    microbatch (bounds activation memory at long seq)."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    m = max(1, shape.global_batch // dp)
+    return min(m, 16)
+
+
+# ---------------------------------------------------------------------------
+# Train
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, num_micro: int = 1,
+                    lr: float = 3e-4, q_chunk: int = 512,
+                    aux_weight: float = 0.01, clip_norm: float = 1.0,
+                    moe_groups: int = 1):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    moe_ep = None
+    if moe_groups == -2:
+        moe_ep = (mesh, dp if isinstance(dp, tuple) else (dp,))
+
+    def loss_fn(params, mb):
+        logits, aux = T.forward(params, mb, cfg, q_chunk=q_chunk, remat=True,
+                                moe_groups=max(moe_groups, 1),
+                                moe_ep=moe_ep)
+        loss = T.lm_loss(logits, mb["labels"])
+        return loss + aux_weight * aux
+
+    def train_step(params, opt_state, batch):
+        if num_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((num_micro, x.shape[0] // num_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(dp))), mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / num_micro, grads)
+            loss = loss / num_micro
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = adamw_update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (abstract_args, in_shardings, out_shardings) for train_step."""
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    batch_shape = IS.train_batch_specs(cfg, shape)
+
+    pspecs = Sh.param_specs(params_shape, cfg, mesh)
+    ospecs = Sh.opt_state_specs(opt_shape, pspecs, cfg, mesh)
+    bspecs = Sh.batch_specs(batch_shape, mesh)
+    metric_specs = {"loss": P(), "grad_norm": P()}
+
+    args = (params_shape, opt_shape, batch_shape)
+    in_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(ospecs, mesh),
+             Sh.to_named(bspecs, mesh))
+    out_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(ospecs, mesh),
+              Sh.to_named(metric_specs, mesh))
+    return args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+
+
+def make_prefill_step(cfg: ModelConfig, *, q_chunk: int = 512,
+                      moe_groups: int = 1):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch, cfg, q_chunk=q_chunk,
+                              remat=True, moe_groups=moe_groups)
+        return logits[:, -1, :]   # next-token logits
+
+    return prefill_step
+
+
+def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    batch_shape = IS.prefill_batch_specs(cfg, shape)
+    pspecs = Sh.param_specs(params_shape, cfg, mesh)
+    bspecs = Sh.batch_specs(batch_shape, mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    bspec = dp if shape.global_batch % ndp == 0 else None
+    vspec = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    out = P(bspec, vspec)
+    args = (params_shape, batch_shape)
+    in_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(bspecs, mesh))
+    out_sh = Sh.to_named(out, mesh)
+    return args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def make_decode_state_shape(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode state (no allocation)."""
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    B, S = shape.global_batch, shape.seq_len
+
+    def init(params, *frames):
+        kw = {"enc_frames": frames[0]} if frames else {}
+        return T.init_decode_state(params, cfg, B, S,
+                                   jnp.dtype(cfg.param_dtype), **kw)
+
+    extra = ()
+    if cfg.is_encoder_decoder:
+        extra = (jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                      jnp.float32),)
+    return jax.eval_shape(init, params_shape, *extra), params_shape
+
+
+def make_serve_step(cfg: ModelConfig):
+    from repro import sharding as _Sh
+
+    def serve_step(params, state, token):
+        logits, state = T.decode_step(params, token, state, cfg)
+        if _Sh.DECODE_OPT:
+            # keep logits vocab-sharded; argmax reduces over the sharded
+            # vocab dim (small collective) instead of all-gathering lm_head
+            try:
+                logits = jax.lax.with_sharding_constraint(
+                    logits, P(None, None, "model"))
+            except Exception:
+                pass
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], state
+
+    return serve_step
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    state_shape, params_shape = make_decode_state_shape(cfg, shape)
+    token_shape = IS.decode_token_spec(cfg, shape)
+    pspecs = Sh.param_specs(params_shape, cfg, mesh)
+    sspecs = Sh.decode_state_specs(state_shape, cfg, mesh, shape)
+    tspecs = Sh.batch_specs({"token": token_shape}, mesh)["token"]
+    args = (params_shape, state_shape, token_shape)
+    in_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(sspecs, mesh),
+             Sh.to_named(tspecs, mesh))
+    out_sh = (Sh.to_named(tspecs, mesh), Sh.to_named(sspecs, mesh))
+    return args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# FedSpace aggregation step (the paper's eq. 4 at datacenter scale)
+
+
+def make_agg_step(cfg: ModelConfig, *, alpha: float = 0.5):
+    from repro.core.aggregation import apply_aggregation
+
+    def agg_step(params, update_stack, staleness):
+        return apply_aggregation(params, update_stack, staleness,
+                                 alpha=alpha)
+
+    return agg_step
+
+
+def make_agg_step_opt(cfg: ModelConfig, mesh: Mesh, *, alpha: float = 0.5,
+                      reduce_dtype=jnp.bfloat16):
+    """§Perf hillclimb C: hand-scheduled eq. 4 via shard_map.
+
+    The buffer of M updates is sharded over 'data' (each host holds the
+    updates it received); each shard computes its local staleness-weighted
+    partial sum in f32, casts to bf16, and a single bf16 psum over 'data'
+    combines — halving the collective bytes of the GSPMD baseline, which
+    all-reduces the f32 delta. The final add to params stays f32."""
+    from repro.core.staleness import staleness_compensation
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def agg_step(params, update_stack, staleness):
+        c = staleness_compensation(staleness, alpha)
+        w = c / jnp.maximum(jnp.sum(c), 1e-12)
+        pspecs = Sh.param_specs(params, cfg, mesh)
+
+        def one(p, u, ps):
+            uspec = P(dp, *tuple(ps))
+
+            def body(pl, ul, wl):
+                # keep the whole partial-sum path in bf16 so XLA's
+                # excess-precision pass cannot promote the psum to f32
+                # (M/16 = 6 local terms: bf16 accumulation error is ~0.4%
+                # of the update, acceptable for eq. 4 — see EXPERIMENTS.md)
+                local = jnp.tensordot(wl.astype(reduce_dtype),
+                                      ul.astype(reduce_dtype), axes=1)
+                delta = jax.lax.psum(local, dp)
+                return (pl.astype(jnp.float32)
+                        + delta.astype(jnp.float32)).astype(pl.dtype)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(ps, uspec, P(dp)),
+                out_specs=ps, check_vma=False)(p, u, w)
+
+        return jax.tree.map(one, params, update_stack, pspecs,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+
+    return agg_step
+
+
+def agg_shardings(cfg: ModelConfig, mesh: Mesh, *, buffer_m: int = 96,
+                  shard_buffer: bool = True):
+    """Buffer of M satellite updates sharded along 'data' (each host stores
+    the updates it received), model dims sharded like the params."""
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = Sh.param_specs(params_shape, cfg, mesh)
+    upd_shape = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((buffer_m,) + l.shape, l.dtype),
+        params_shape)
+    mspec = "data" if (shard_buffer and buffer_m % mesh.shape["data"] == 0) \
+        else None
+    uspecs = jax.tree.map(lambda ps: P(mspec, *tuple(ps)), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    stal_shape = jax.ShapeDtypeStruct((buffer_m,), jnp.int32)
+    args = (params_shape, upd_shape, stal_shape)
+    in_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(uspecs, mesh),
+             Sh.to_named(P(), mesh))
+    out_sh = Sh.to_named(pspecs, mesh)
+    return args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# Full FL round step: vmapped client local SGD (eq. 3) + eq. 4 aggregation
+# — the paper's technique as ONE distributed datacenter step (used when the
+# GS pod replays buffered client rounds, e.g. for utility-sample generation
+# at scale).
+
+
+def make_fl_round_step(cfg: ModelConfig, *, local_steps: int = 4,
+                       client_lr: float = 0.05, alpha: float = 0.5,
+                       q_chunk: int = 512):
+    from repro.core.aggregation import apply_aggregation
+
+    def client_update(params, batches):
+        def body(p, batch):
+            def loss_fn(p_):
+                logits, aux = T.forward(p_, batch, cfg, q_chunk=q_chunk,
+                                        remat=True)
+                return T.lm_loss(logits, batch["labels"]) + 0.01 * aux
+            g = jax.grad(loss_fn)(params if False else p)
+            p = jax.tree.map(
+                lambda w, g_: (w.astype(jnp.float32)
+                               - client_lr * g_.astype(jnp.float32)
+                               ).astype(w.dtype), p, g)
+            return p, None
+
+        final, _ = jax.lax.scan(body, params, batches)
+        return jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                          - b.astype(jnp.float32)),
+                            final, params)
+
+    def fl_round_step(params, client_batches, staleness):
+        """client_batches: pytree with leading (M, local_steps, B, ...)."""
+        updates = jax.vmap(lambda b: client_update(params, b))(
+            client_batches)
+        return apply_aggregation(params, updates, staleness, alpha=alpha)
+
+    return fl_round_step
+
+
+def fl_round_shardings(cfg: ModelConfig, mesh: Mesh, *, buffer_m: int = 16,
+                       local_steps: int = 4, batch: int = 8,
+                       seq: int = 512):
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = Sh.param_specs(params_shape, cfg, mesh)
+    cb = {
+        "tokens": jax.ShapeDtypeStruct((buffer_m, local_steps, batch, seq),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((buffer_m, local_steps, batch, seq),
+                                       jnp.int32),
+    }
+    mspec = "data" if buffer_m % mesh.shape["data"] == 0 else None
+    cbspecs = jax.tree.map(lambda _: P(mspec), cb)
+    stal = jax.ShapeDtypeStruct((buffer_m,), jnp.int32)
+    args = (params_shape, cb, stal)
+    in_sh = (Sh.to_named(pspecs, mesh), Sh.to_named(cbspecs, mesh),
+             Sh.to_named(P(), mesh))
+    out_sh = Sh.to_named(pspecs, mesh)
+    return args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher used by dryrun / benchmarks
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+          num_micro: int = None, q_chunk: int = 512, moe_groups: int = 1):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    if shape.kind == "agg":
+        if moe_groups == -3:   # flag reuse: optimized shard_map agg step
+            fn = make_agg_step_opt(cfg, mesh)
+        else:
+            fn = make_agg_step(cfg)
+        args, i, o = agg_shardings(cfg, mesh,
+                                   buffer_m=shape.global_batch)
+        return fn, args, i, o
+    if shape.kind == "flround":
+        fn = make_fl_round_step(cfg)
+        args, i, o = fl_round_shardings(cfg, mesh,
+                                        buffer_m=shape.global_batch,
+                                        seq=shape.seq_len)
+        return fn, args, i, o
+    if shape.kind == "train":
+        nm = num_micro if num_micro is not None else \
+            default_num_micro(cfg, shape, mesh)
+        if moe_groups == -1:   # auto: one routing group per microbatch seq
+            moe_groups = max(1, shape.global_batch // nm)
+        # moe_groups == -2: expert-parallel shard_map path
+        fn = make_train_step(cfg, mesh, num_micro=nm, q_chunk=q_chunk,
+                             moe_groups=moe_groups)
+        args, i, o = train_shardings(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        if moe_groups == -1:
+            moe_groups = shape.global_batch
+        fn = make_prefill_step(cfg, q_chunk=q_chunk, moe_groups=moe_groups)
+        args, i, o = prefill_shardings(cfg, shape, mesh)
+    else:
+        fn = make_serve_step(cfg)
+        args, i, o = decode_shardings(cfg, shape, mesh)
+    return fn, args, i, o

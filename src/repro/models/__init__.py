@@ -1,0 +1,2 @@
+from repro.models.transformer import (decode_step, forward, init_decode_state,
+                                      init_params, lm_loss)

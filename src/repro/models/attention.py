@@ -1,0 +1,250 @@
+"""Attention blocks: GQA with RoPE, optional qk-norm, global (causal) and
+local (sliding-window) variants; chunked (flash-style, online-softmax-free —
+per-q-chunk full softmax) training path and single-token decode against a KV
+cache.
+
+Layouts:
+  activations  x        : (B, S, D)
+  q            q        : (B, S, H, hd)
+  kv           k, v     : (B, T, K, hd)      K = num_kv_heads
+  kv cache     (B, T, K, hd) with a scalar `index` for the write position;
+               local layers keep T = window (ring buffer).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+# When True, the per-q-chunk attention body is jax.checkpoint-ed so the
+# backward pass recomputes score panels instead of saving a (n_chunks, bq,
+# T) f32 stack per layer — the dominant HBM term of the train shapes
+# (EXPERIMENTS.md §Perf). Set via remat_attention_chunks(); default False
+# keeps the paper-faithful baseline lowering.
+_REMAT_CHUNKS = False
+
+
+class remat_attention_chunks:
+    def __init__(self, enable: bool = True):
+        self.enable = enable
+
+    def __enter__(self):
+        global _REMAT_CHUNKS
+        self._old = _REMAT_CHUNKS
+        _REMAT_CHUNKS = self.enable
+
+    def __exit__(self, *a):
+        global _REMAT_CHUNKS
+        _REMAT_CHUNKS = self._old
+
+
+def _pick_chunk(S: int, q_chunk: int) -> int:
+    """Largest divisor of S that is <= q_chunk."""
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+    return qc
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, T, K, hd)
+    v: jnp.ndarray       # (B, T, K, hd)
+
+
+def attention_init(key, cfg: ModelConfig, kind: str):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "norm": L.rmsnorm_init(d, dt),
+        "wq": L.dense_init(ks[0], d, H * hd, dt),
+        "wk": L.dense_init(ks[1], d, K * hd, dt),
+        "wv": L.dense_init(ks[2], d, K * hd, dt),
+        "wo": L.dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd, dt)
+        p["k_norm"] = L.rmsnorm_init(hd, dt)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, K, hd)
+    v = (x @ params["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,K,G,hd)  k,v: (B,Tk,K,hd)  mask: (B or 1, Sq, Tk) bool."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def _attend_full(q, k, v, cfg: ModelConfig, q_chunk: int, causal: bool = True):
+    """Chunked causal attention over the full sequence (global layers)."""
+    B, S, H, hd = q.shape
+    K = cfg.num_kv_heads
+    G = H // K
+    scale = hd ** -0.5
+    q = q.reshape(B, S, K, G, hd)
+    qc = _pick_chunk(S, q_chunk)
+    n = S // qc
+
+    T = k.shape[1]
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * qc, qc, axis=1)
+        qpos = i * qc + jnp.arange(qc)
+        kpos = jnp.arange(T)
+        mask = (kpos[None, None, :] <= qpos[None, :, None]) if causal else \
+            jnp.ones((1, qc, T), bool)
+        o = _sdpa(qi, k, v, mask, scale)
+        return carry, o
+
+    fn = jax.checkpoint(body) if _REMAT_CHUNKS else body
+    _, out = jax.lax.scan(fn, 0, jnp.arange(n))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    return out
+
+
+def _attend_local(q, k, v, cfg: ModelConfig, q_chunk: int):
+    """Sliding-window causal attention; each q chunk only sees a
+    (window + q_chunk)-wide kv slice — sub-quadratic in S."""
+    B, S, H, hd = q.shape
+    K = cfg.num_kv_heads
+    G = H // K
+    W = cfg.window_size
+    scale = hd ** -0.5
+    if S <= W:  # window covers everything
+        return _attend_full(q, k, v, cfg, q_chunk)
+    q = q.reshape(B, S, K, G, hd)
+    qc = _pick_chunk(S, q_chunk)
+    n = S // qc
+    # Pre-pad kv in front so every slice is in-bounds.
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * qc, qc, axis=1)
+        ki = jax.lax.dynamic_slice_in_dim(kp, i * qc, W + qc, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vp, i * qc, W + qc, axis=1)
+        qpos = i * qc + jnp.arange(qc)
+        kpos = i * qc - W + jnp.arange(W + qc)
+        diff = qpos[:, None] - kpos[None, :]
+        mask = ((diff >= 0) & (diff < W) & (kpos[None, :] >= 0))[None]
+        o = _sdpa(qi, ki, vi, mask, scale)
+        return carry, o
+
+    fn = jax.checkpoint(body) if _REMAT_CHUNKS else body
+    _, out = jax.lax.scan(fn, 0, jnp.arange(n))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def attention_apply(params, x, cfg: ModelConfig, kind: str,
+                    q_chunk: int = 512, positions=None, kv_override=None):
+    """Full-sequence (train/prefill) attention block with pre-norm+residual.
+
+    kv_override: (k, v, kv_positions, causal) — used by cross-attention.
+    """
+    B, S, _ = x.shape
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if kv_override is None:
+        q, k, v = _project_qkv(params, h, cfg, positions)
+        if kind == "local":
+            o = _attend_local(q, k, v, cfg, q_chunk)
+        else:
+            causal = kind != "enc"
+            o = _attend_full(q, k, v, cfg, q_chunk, causal=causal)
+    else:
+        k, v, causal = kv_override
+        hd = cfg.resolved_head_dim
+        q = (h @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+        if cfg.qk_norm:
+            q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        o = _attend_full(q, k, v, cfg, q_chunk, causal=causal)
+    o = o.reshape(B, S, -1) @ params["wo"]
+    return x + o
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (enc_out @ params["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+
+
+def init_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int, dtype):
+    T = min(cfg.window_size, seq_len) if kind == "local" else seq_len
+    hd = cfg.resolved_head_dim
+    shape = (batch, T, cfg.num_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(params, x, cache: KVCache, index, cfg: ModelConfig,
+                     kind: str, kv_override=None):
+    """x: (B, 1, D); index: scalar int32 — number of tokens already in cache.
+
+    Returns (y, new_cache). Local layers treat the cache as a ring buffer.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    G = H // K
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    pos = jnp.broadcast_to(index[None] if index.ndim == 0 else index, (B, 1)) \
+        if not isinstance(index, int) else jnp.full((B, 1), index)
+    if kv_override is None:
+        q, k_new, v_new = _project_qkv(params, h, cfg, pos)
+        T = cache.k.shape[1]
+        slot = (index % T).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+        cache = KVCache(ck, cv)
+        # validity: ring buffer slots written so far, within window for local
+        tpos = jnp.arange(T)
+        n_written = jnp.minimum(index + 1, T)
+        if kind == "local":
+            valid = (tpos < n_written)
+        else:
+            valid = tpos <= index
+        mask = jnp.broadcast_to(valid[None, None, :], (1, 1, T))
+        o = _sdpa(q.reshape(B, 1, K, G, hd), ck, cv, mask, hd ** -0.5)
+    else:
+        k, v = kv_override
+        q = (h @ params["wq"]).reshape(B, 1, H, hd)
+        if cfg.qk_norm:
+            q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        T = k.shape[1]
+        mask = jnp.ones((1, 1, T), bool)
+        o = _sdpa(q.reshape(B, 1, K, G, hd), k, v, mask, hd ** -0.5)
+    y = o.reshape(B, 1, H * hd) @ params["wo"]
+    return x + y, cache

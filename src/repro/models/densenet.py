@@ -1,0 +1,97 @@
+"""Compact DenseNet-style CNN — the paper's own FL model (DenseNet-161 on
+fMoW, batch-norm replaced by group-norm per Hsieh et al. 2020; we implement
+the same architecture family at reduced width — see DESIGN.md §7).
+
+Used by the FL experiments (62-class image classification). Supports a
+``frozen_blocks`` prefix mirroring the paper's transfer-learning setup (the
+FL optimizer masks those gradients).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_GROUPS = 8
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = (kh * kw * cin) ** -0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _groupnorm(params, x, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(NUM_GROUPS, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return xn * params["scale"] + params["bias"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def densenet_init(key, *, num_classes=62, growth=12, blocks=(4, 4, 4, 4),
+                  stem=24, in_channels=3):
+    ks = iter(jax.random.split(key, 4 + sum(blocks) * 2 + len(blocks) * 2))
+    p = {"stem": _conv_init(next(ks), 3, 3, in_channels, stem)}
+    c = stem
+    p["blocks"] = []
+    for bi, n in enumerate(blocks):
+        layers = []
+        for _ in range(n):
+            layers.append({
+                "gn": _gn_init(c),
+                "conv": _conv_init(next(ks), 3, 3, c, growth),
+            })
+            c += growth
+        blk = {"layers": layers}
+        if bi != len(blocks) - 1:
+            cout = c // 2
+            blk["trans"] = {"gn": _gn_init(c),
+                            "conv": _conv_init(next(ks), 1, 1, c, cout)}
+            c = cout
+        p["blocks"].append(blk)
+    p["head_gn"] = _gn_init(c)
+    p["head"] = jax.random.normal(next(ks), (c, num_classes),
+                                  jnp.float32) * c ** -0.5
+    return p
+
+
+def densenet_apply(params, x):
+    """x: (B, H, W, C) float -> logits (B, num_classes)."""
+    h = _conv(x, params["stem"])
+    for blk in params["blocks"]:
+        for lyr in blk["layers"]:
+            y = jax.nn.relu(_groupnorm(lyr["gn"], h))
+            y = _conv(y, lyr["conv"])
+            h = jnp.concatenate([h, y], axis=-1)
+        if "trans" in blk:
+            h = jax.nn.relu(_groupnorm(blk["trans"]["gn"], h))
+            h = _conv(h, blk["trans"]["conv"])
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    h = jax.nn.relu(_groupnorm(params["head_gn"], h))
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head"]
+
+
+def frozen_mask(params, frozen_blocks: int):
+    """1.0 for trainable leaves, 0.0 for frozen (stem + first N blocks) —
+    mirrors the paper's 'freeze the lower 3 dense blocks'."""
+    mask = jax.tree.map(lambda _: 1.0, params)
+    if frozen_blocks <= 0:
+        return mask
+    mask["stem"] = jax.tree.map(lambda _: 0.0, mask["stem"])
+    for bi in range(min(frozen_blocks, len(params["blocks"]))):
+        mask["blocks"][bi] = jax.tree.map(lambda _: 0.0, mask["blocks"][bi])
+    return mask

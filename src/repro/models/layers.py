@@ -1,0 +1,110 @@
+"""Shared neural-net layers: RMSNorm, RoPE, MLPs, initializers.
+
+All layers are pure functions over parameter pytrees (dicts of jnp arrays);
+init functions return the pytree for one layer (callers stack them for
+scanned stages).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return inv  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, dt),
+            "w_up": dense_init(ks[1], d, f, dt),
+            "w_down": dense_init(ks[2], f, d, dt),
+        }
+    return {
+        "w_up": dense_init(ks[1], d, f, dt),
+        "w_down": dense_init(ks[2], f, d, dt),
+    }
+
+
+def mlp_apply(params, x, act: str):
+    if act == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu((x @ params["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+
+
+def embedding_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    p = {"embed": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                     jnp.float32) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(jax.random.fold_in(key, 1),
+                                  cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]

@@ -1,0 +1,297 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design note (roofline honesty): GShard-style one-hot dispatch einsums turn
+token routing into O(T·E·C·D) matmul FLOPs, which would swamp the compiled
+FLOP count with bookkeeping. Here routing is pure data movement
+(argsort + scatter/gather — zero FLOPs in HLO cost analysis) and the expert
+computation is a grouped einsum over an (E, C, D) buffer, so HLO_FLOPs ≈
+active-expert FLOPs (top-k · tokens), matching MODEL_FLOPS = 6·N_active·D.
+
+Token overflow beyond per-expert capacity C = ceil(k·T/E · cf) is dropped
+(standard capacity-factor semantics); tests check the no-drop regime matches
+a dense reference exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+
+    def einit(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        "router": einit(ks[0], (d, e), d ** -0.5),
+        "w_gate": einit(ks[1], (e, d, f), d ** -0.5),
+        "w_up": einit(ks[2], (e, d, f), d ** -0.5),
+        "w_down": einit(ks[3], (e, f, d), f ** -0.5),
+    }
+
+
+def _constrain(x, spec):
+    """Best-effort sharding constraint: applies when a mesh with the named
+    axes is in scope (pjit paths); a no-op on plain CPU tests."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.experts_per_token * num_tokens / cfg.num_experts
+            * cfg.moe_capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(params, x, cfg: ModelConfig, *, groups: int = 1):
+    """x: (B, S, D) -> (B, S, D) with residual; also returns aux loss.
+
+    groups > 1 (beyond-paper §Perf optimization): tokens are split into
+    `groups` independent routing groups (aligned with the data-parallel
+    axis by the caller) so the argsort/scatter dispatch stays local to a
+    shard — under GSPMD the global-token dispatch otherwise degenerates
+    into replicated compute + giant all-reduces (see EXPERIMENTS.md §Perf).
+    Routing quality is unchanged in expectation; capacity is enforced per
+    group instead of globally.
+    """
+    if groups > 1:
+        return _moe_apply_grouped(params, x, cfg, groups)
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xt = h.reshape(B * S, D)
+    T = B * S
+    C = _capacity(cfg, T)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Flatten the T*k assignments and sort them by expert id.
+    flat_e = expert_idx.reshape(-1)                              # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)                        # (T*k,)
+    flat_g = gate_vals.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k, dtype=jnp.int32) - offsets[se]
+    keep = rank < C
+    # overflow slots get an out-of-bounds rank so mode="drop" discards them
+    # (clamping to 0 would overwrite a real token's slot)
+    rank_s = jnp.where(keep, rank, C)
+    rank_c = jnp.where(keep, rank, 0)   # clamped form for the gather side
+
+    # Scatter tokens into the (E, C, D) expert buffer (pure data movement).
+    buf = jnp.zeros((E, C, D), xt.dtype).at[se, rank_s].set(
+        xt[st], mode="drop")
+
+    # Grouped expert FFN — the only FLOP-bearing ops in the block.
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", act, params["w_down"])        # (E, C, D)
+
+    # Combine back to token order with gate weighting.
+    per_assign = y[se, rank_c] * (sg * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((T, D), y.dtype).at[st].add(per_assign)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    frac_tokens = counts.astype(jnp.float32) / (T * k)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return x + out.reshape(B, S, D), aux
+
+
+def _moe_apply_grouped(params, x, cfg: ModelConfig, groups: int):
+    """Group-local dispatch (§Perf optimization, see moe_apply docstring).
+
+    All routing bookkeeping (top-k, rank-in-expert, scatter/gather) carries
+    an explicit leading group axis constrained to the 'data' mesh axis, so
+    GSPMD keeps it local to a shard; only the expert einsum touches the
+    'model'-sharded expert weights. Capacity is per group."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    assert T % groups == 0, (T, groups)
+    G, Tg = groups, T // groups
+    C = _capacity(cfg, Tg)
+
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xg = _constrain(h.reshape(G, Tg, D), ("data", None, None))
+
+    logits = (xg @ params["router"]).astype(jnp.float32)      # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (G,Tg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_e = expert_idx.reshape(G, Tg * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k))
+    flat_g = gate_vals.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, axis=1)           # (G,Tk)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+
+    # offsets[g, e] = first position of expert e in the sorted assignment
+    # list (binary search — avoids materializing a (G, Tg*k, E) one-hot)
+    offsets = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left")
+    )(se).astype(jnp.int32)                                   # (G,E)
+    counts = jnp.diff(jnp.concatenate(
+        [offsets, jnp.full((G, 1), Tg * k, jnp.int32)], axis=1), axis=1)
+    rank = jnp.arange(Tg * k, dtype=jnp.int32)[None] \
+        - jnp.take_along_axis(offsets, se, axis=1)
+    keep = rank < C
+    rank_s = jnp.where(keep, rank, C)   # OOB => dropped by the scatter
+    rank_c = jnp.where(keep, rank, 0)
+
+    gidx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg * k))
+    gathered = jnp.take_along_axis(xg, st[..., None], axis=1)
+    buf = jnp.zeros((G, E, C, D), xg.dtype).at[
+        gidx, se, rank_s].set(gathered, mode="drop")
+    buf = _constrain(buf, ("data", None, None, None))
+
+    g_h = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    u_h = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    act = jax.nn.silu(g_h.astype(jnp.float32)).astype(u_h.dtype) * u_h
+    y = jnp.einsum("gecf,efd->gecd", act, params["w_down"])   # (G,E,C,D)
+    y = _constrain(y, ("data", None, None, None))
+
+    per_assign = y[gidx, se, rank_c] \
+        * (sg * keep).astype(y.dtype)[..., None]              # (G,Tk,D)
+    out = jnp.zeros((G, Tg, D), y.dtype).at[
+        gidx, st].add(per_assign)
+    out = _constrain(out, ("data", None, None))
+
+    frac_tokens = jnp.sum(counts, axis=0).astype(jnp.float32) / (T * k)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return x + out.reshape(B, S, D), aux
+
+
+def moe_apply_ep(params, x, cfg: ModelConfig, mesh, *,
+                 data_axes=("data",), model_axis: str = "model"):
+    """Expert-parallel MoE via shard_map (§Perf iteration 3 — see
+    EXPERIMENTS.md). GSPMD cannot partition the dispatch scatter/gather
+    (it replicates the (G,E,C,D) buffer per device and reconciles with
+    giant masked all-reduces), so we write the collective schedule by hand:
+
+      * tokens sharded over the data axis, replicated over model;
+      * each model shard scatters tokens into a buffer for ITS experts only
+        (dispatch is entirely local — tokens are already resident);
+      * local grouped einsum over E/model_size experts;
+      * partial combine (scatter-add of this shard's expert outputs) and a
+        single psum over the model axis.
+
+    Requires num_experts % model_size == 0 (qwen3-moe; mixtral falls back
+    to the grouped path). Under eq.-4-style normalized gates the psum is
+    the exact combine."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map as _shard_map
+        shard_map = _shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    n_model = mesh.shape[model_axis]
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    assert E % n_model == 0, (E, n_model)
+    El = E // n_model
+    Tg = T // n_data
+    C = _capacity(cfg, Tg)
+
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xt = h.reshape(T, D)
+
+    def body(xl, router, w_gate, w_up, w_down):
+        # xl: (Tg, D); w_*: (El, D, F) local expert slice
+        midx = jax.lax.axis_index(model_axis)
+        logits = (xl @ router).astype(jnp.float32)            # (Tg, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        flat_e = expert_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tg), k)
+        flat_g = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        offsets = jnp.searchsorted(se, jnp.arange(E)).astype(jnp.int32)
+        rank = jnp.arange(Tg * k, dtype=jnp.int32) - offsets[se]
+        keep = rank < C
+        # local expert window [midx*El, (midx+1)*El); out-of-window or
+        # over-capacity rows get OOB indices and are dropped by the scatter
+        le = se - midx * El
+        mine = (le >= 0) & (le < El) & keep
+        le_c = jnp.clip(le, 0, El - 1)
+        rank_s = jnp.where(keep, rank, C)
+        rank_c = jnp.where(keep, rank, 0)
+        buf = jnp.zeros((El, C, D), xl.dtype).at[le, rank_s].set(
+            xl[st], mode="drop")
+        g_h = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        u_h = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        act = jax.nn.silu(g_h.astype(jnp.float32)).astype(u_h.dtype) * u_h
+        y = jnp.einsum("ecf,efd->ecd", act, w_down)           # (El, C, D)
+        per_assign = y[le_c, rank_c] \
+            * (sg * mine).astype(y.dtype)[:, None]
+        out = jnp.zeros((Tg, D), y.dtype).at[st].add(per_assign)
+        out = jax.lax.psum(out, model_axis)                   # combine
+        counts = jnp.diff(jnp.concatenate(
+            [offsets, jnp.asarray([Tg * k], jnp.int32)]))
+        frac_tokens = counts.astype(jnp.float32) / (Tg * k)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(frac_tokens * frac_probs)
+        aux = jax.lax.pmean(aux, data_axes)
+        return out, aux
+
+    # expert-weight specs must match repro.sharding.param_spec
+    wspec = P(model_axis, None, None)
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axes, None), P(None, None), wspec, wspec, wspec),
+        out_specs=(P(data_axes, None), P()),
+        check_vma=False,
+    )(xt, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    return x + out.reshape(B, S, D), aux
+
+
+def moe_apply_dense(params, x, cfg: ModelConfig):
+    """Dense (all-experts) oracle for tests: computes every expert for every
+    token and combines with the same top-k gates. O(T·E) FLOPs — tiny shapes
+    only."""
+    B, S, D = x.shape
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xt = h.reshape(B * S, D)
+    logits = (xt @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], expert_idx].set(gate_vals)
+    g = jnp.einsum("td,edf->tef", xt, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", xt, params["w_up"])
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    y = jnp.einsum("tef,efd->ted", act, params["w_down"])
+    out = jnp.einsum("ted,te->td", y, gates.astype(y.dtype))
+    return x + out.reshape(B, S, D)

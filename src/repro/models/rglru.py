@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Block: norm -> {x-branch: linear -> causal conv -> RG-LRU} * gelu(gate-branch)
+-> out projection, with residual.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a h_in + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x h_in + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan over the sequence; decode carries
+(h, conv tail).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+_C = 8.0
+_CONV_W = 4
+
+
+class LRUState(NamedTuple):
+    h: jnp.ndarray       # (B, lru_width)
+    conv: jnp.ndarray    # (B, CONV_W-1, lru_width)
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ U(0.9, 0.999) at r = 0.5
+    lam = jnp.linspace(0.7, 2.5, w).astype(jnp.float32)
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        "w_x": L.dense_init(ks[0], d, w, dt),
+        "w_gate": L.dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (_CONV_W, w), jnp.float32)
+                   * 0.2).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": L.dense_init(ks[3], w, w, dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": L.dense_init(ks[4], w, w, dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out_proj": L.dense_init(ks[5], w, d, dt),
+    }
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid((xc @ params["w_a"]).astype(jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid((xc @ params["w_i"]).astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xc.astype(jnp.float32)   # (a_t, u_t): h = a h- + u
+
+
+def rglru_apply(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D) with residual."""
+    B, S, D = x.shape
+    hin = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xb = hin @ params["w_x"]
+    gate = jax.nn.gelu((hin @ params["w_gate"]).astype(jnp.float32))
+    xp = jnp.pad(xb, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + S, :] * params["conv_w"][i] for i in range(_CONV_W))
+    xc = xc + params["conv_b"]
+    a, u = _gates(params, xc)                     # (B,S,W) f32
+
+    def combine(e1, e2):
+        a1, u1 = e1
+        a2, u2 = e2
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = (h * gate).astype(x.dtype)
+    return x + y @ params["out_proj"]
+
+
+def rglru_init_state(params, cfg: ModelConfig, batch: int, dtype) -> LRUState:
+    w = cfg.lru_width or cfg.d_model
+    return LRUState(h=jnp.zeros((batch, w), jnp.float32),
+                    conv=jnp.zeros((batch, _CONV_W - 1, w), dtype))
+
+
+def rglru_decode(params, x, state: LRUState, cfg: ModelConfig):
+    """x: (B, 1, D) -> (y, new_state)."""
+    B = x.shape[0]
+    hin = L.rmsnorm(params["norm"], x, cfg.norm_eps)[:, 0]
+    xb = hin @ params["w_x"]
+    gate = jax.nn.gelu((hin @ params["w_gate"]).astype(jnp.float32))
+    window = jnp.concatenate([state.conv, xb[:, None, :]], axis=1)
+    xc = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    a, u = _gates(params, xc)
+    h_new = a * state.h + u
+    y = (h_new * gate).astype(x.dtype)
+    out = x + (y @ params["out_proj"])[:, None, :]
+    return out, LRUState(h=h_new, conv=window[:, 1:, :])
+
+
+def rglru_reference(params, x, cfg: ModelConfig):
+    """Step-by-step oracle for tests."""
+    B, S, D = x.shape
+    st = rglru_init_state(params, cfg, B, x.dtype)
+
+    def body(s, xt):
+        y, s2 = rglru_decode(params, xt[:, None, :], s, cfg)
+        return s2, y[:, 0]
+
+    _, ys = jax.lax.scan(body, st, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)

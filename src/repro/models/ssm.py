@@ -1,0 +1,203 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside fixed-size chunks + a linear recurrence across chunk
+states. Decode carries the (H, N, P) recurrent state and a causal-conv tail.
+
+Dims: B batch, Sq seq, D d_model, Di = expand·D inner, P = head_dim,
+H = Di/P heads, N = ssm_state_dim. B/C projections are shared across heads
+(ngroups = 1, as in the 370M model).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class SSMState(NamedTuple):
+    s: jnp.ndarray       # (B, H, N, P) recurrent state
+    conv: jnp.ndarray    # (B, W-1, Di + 2N) conv tail
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state_dim
+    return di, p, h, n
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, p, h, n = _dims(cfg)
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        # order of proj outputs: [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),           # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),    # softplus ≈ 0.12
+        "out_norm": L.rmsnorm_init(di, dt),
+        "out_proj": L.dense_init(ks[2], di, d, dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, p, h, n = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over the sequence axis. xbc: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _segsum_decay(dta):
+    """dta: (..., Q, H) per-step log-decay. Returns L: (..., H, Q, Q) with
+    L[t,s] = exp(sum_{s<τ<=t} dta_τ) for s<=t else 0."""
+    cs = jnp.cumsum(dta, axis=-2)                          # (..., Q, H)
+    diff = cs[..., :, None, :] - cs[..., None, :, :]       # (..., t, s, H)
+    Q = dta.shape[-2]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask[..., None], diff, -jnp.inf)
+    return jnp.exp(diff)                                   # (..., t, s, H)
+
+
+def ssm_apply(params, x, cfg: ModelConfig):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D) with residual."""
+    Bsz, S, D = x.shape
+    di, p, h, n = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:          # largest divisor of S not exceeding ssm_chunk
+        Q -= 1
+    nc = S // Q
+
+    hin = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    proj = hin @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"],
+                                   params["conv_b"]).astype(jnp.float32)
+                      ).astype(x.dtype)
+    xs = xbc[..., :di].reshape(Bsz, S, h, p)
+    Bm = xbc[..., di:di + n]
+    Cm = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                          # (h,)
+    dta = dt * A                                           # (B,S,h) log decay
+
+    # chunk views
+    xc = xs.reshape(Bsz, nc, Q, h, p)
+    bc = Bm.reshape(Bsz, nc, Q, n)
+    cc = Cm.reshape(Bsz, nc, Q, n)
+    dtc = dt.reshape(Bsz, nc, Q, h)
+    dtac = dta.reshape(Bsz, nc, Q, h)
+
+    dtx = xc * dtc[..., None].astype(xc.dtype)             # (B,nc,Q,h,p)
+
+    # --- intra-chunk (diagonal blocks) ---
+    Lm = _segsum_decay(dtac)                               # (B,nc,t,s,h)
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc,
+                    preferred_element_type=jnp.float32)    # (B,nc,t,s)
+    scores = (cb[..., None] * Lm).astype(xc.dtype)         # (B,nc,t,s,h)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, dtx)
+
+    # --- chunk states and inter-chunk recurrence ---
+    cum = jnp.cumsum(dtac, axis=2)                         # (B,nc,Q,h)
+    total = cum[:, :, -1, :]                               # (B,nc,h)
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)     # (B,nc,Q,h)
+    states = jnp.einsum("bcsh,bcsn,bcshp->bchnp",
+                        decay_to_end.astype(xc.dtype), bc.astype(xc.dtype),
+                        dtx)                               # (B,nc,h,n,p)
+
+    def scan_body(s_prev, inp):
+        st, tot = inp                                      # (B,h,n,p), (B,h)
+        s_new = s_prev * jnp.exp(tot)[..., None, None].astype(st.dtype) + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((Bsz, h, n, p), xc.dtype)
+    _, s_prevs = jax.lax.scan(
+        scan_body, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                  # (B,nc,h,n,p)
+
+    y_inter = jnp.einsum("bctn,bchnp->bcthp", cc.astype(xc.dtype), s_prevs)
+    y_inter = y_inter * jnp.exp(cum)[..., None].astype(xc.dtype)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, h, p)
+    y = y + xs * params["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = L.rmsnorm(params["out_norm"],
+                  y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  cfg.norm_eps)
+    return x + y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    di, p, h, n = _dims(cfg)
+    return SSMState(
+        s=jnp.zeros((batch, h, n, p), dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype),
+    )
+
+
+def ssm_decode(params, x, state: SSMState, cfg: ModelConfig):
+    """x: (B, 1, D) -> (y, new_state)."""
+    Bsz = x.shape[0]
+    di, p, h, n = _dims(cfg)
+    hin = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    proj = (hin @ params["in_proj"])[:, 0]                 # (B, ·)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) \
+        + params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xt = xbc_t[:, :di].reshape(Bsz, h, p)
+    Bt = xbc_t[:, di:di + n]
+    Ct = xbc_t[:, di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                # (B,h)
+    upd = jnp.einsum("bn,bhp->bhnp", Bt, xt * dt[..., None].astype(xt.dtype))
+    s_new = state.s * decay[..., None, None].astype(state.s.dtype) + upd
+    y = jnp.einsum("bn,bhnp->bhp", Ct, s_new) \
+        + xt * params["D"].astype(xt.dtype)[None, :, None]
+    y = y.reshape(Bsz, di)
+    y = L.rmsnorm(params["out_norm"],
+                  y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  cfg.norm_eps)
+    out = x + (y @ params["out_proj"])[:, None, :]
+    return out, SSMState(s=s_new, conv=window[:, 1:, :])
+
+
+def ssm_reference(params, x, cfg: ModelConfig):
+    """Sequential recurrence oracle for tests (O(S) python-free scan)."""
+    Bsz, S, D = x.shape
+    state = ssm_init_state(cfg, Bsz, x.dtype)
+
+    def body(st, xt):
+        y, st2 = ssm_decode(params, xt[:, None, :], st, cfg)
+        return st2, y[:, 0]
+
+    _, ys = jax.lax.scan(body, state, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,288 @@
+"""Composable decoder stack for all assigned architectures.
+
+A model is a sequence of *stages* (``StageSpec``); each stage is a pattern of
+block kinds repeated N times and executed with ``jax.lax.scan`` over stacked
+parameters (keeps HLO size ~O(pattern), not O(num_layers), which matters at
+48 layers x 512 virtual devices in the dry-run).
+
+Block kinds:
+  global / local  -> attention (+ dense or MoE FFN)
+  enc             -> bidirectional attention (+ FFN)   [whisper encoder]
+  cross           -> causal self-attn + cross-attn + FFN [whisper decoder]
+  recurrent       -> RG-LRU (+ FFN)
+  ssm             -> Mamba-2 SSD (self-contained, no FFN)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, StageSpec
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+
+VISION_DIM = 1024  # stub CLIP/SigLIP patch-embedding width
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / decode
+
+
+def _ffn_init(key, cfg: ModelConfig):
+    if cfg.num_experts:
+        return {"moe": M.moe_init(key, cfg)}
+    return {"norm": L.rmsnorm_init(cfg.d_model, L.dtype_of(cfg)),
+            "mlp": L.mlp_init(key, cfg)}
+
+
+def _ffn_apply(params, x, cfg: ModelConfig, moe_groups: int = 1,
+               moe_ep=None):
+    if cfg.num_experts:
+        if moe_ep is not None:
+            mesh, data_axes = moe_ep
+            if cfg.num_experts % mesh.shape["model"] == 0:
+                return M.moe_apply_ep(params["moe"], x, cfg, mesh,
+                                      data_axes=data_axes)
+        return M.moe_apply(params["moe"], x, cfg, groups=moe_groups)
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    return x + L.mlp_apply(params["mlp"], h, cfg.mlp_act), 0.0
+
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {"ssm": S.ssm_init(ks[0], cfg)}
+    if kind == "recurrent":
+        return {"rec": R.rglru_init(ks[0], cfg), "ffn": _ffn_init(ks[1], cfg)}
+    if kind == "cross":
+        return {"attn": A.attention_init(ks[0], cfg, "global"),
+                "xattn": A.attention_init(ks[1], cfg, "global"),
+                "ffn": _ffn_init(ks[2], cfg)}
+    return {"attn": A.attention_init(ks[0], cfg, kind),
+            "ffn": _ffn_init(ks[1], cfg)}
+
+
+def block_apply(params, x, cfg: ModelConfig, kind: str, *,
+                positions=None, enc_out=None, q_chunk=512, moe_groups=1,
+                moe_ep=None):
+    aux = 0.0
+    if kind == "ssm":
+        return S.ssm_apply(params["ssm"], x, cfg), aux
+    if kind == "recurrent":
+        x = R.rglru_apply(params["rec"], x, cfg)
+    elif kind == "cross":
+        x = A.attention_apply(params["attn"], x, cfg, "global",
+                              q_chunk=q_chunk, positions=positions)
+        k, v = A.cross_kv(params["xattn"], enc_out, cfg)
+        x = A.attention_apply(params["xattn"], x, cfg, "global",
+                              q_chunk=q_chunk, positions=positions,
+                              kv_override=(k, v, False))
+    else:
+        x = A.attention_apply(params["attn"], x, cfg, kind,
+                              q_chunk=q_chunk, positions=positions)
+    x, aux = _ffn_apply(params["ffn"], x, cfg, moe_groups, moe_ep)
+    return x, aux
+
+
+def block_init_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     dtype, enc_out=None, params=None):
+    if kind == "ssm":
+        return S.ssm_init_state(cfg, batch, dtype)
+    if kind == "recurrent":
+        return R.rglru_init_state(params and params.get("rec"), cfg, batch,
+                                  dtype)
+    if kind == "cross":
+        ck, cv = A.cross_kv(params["xattn"], enc_out, cfg)
+        return {"self": A.init_cache(cfg, "global", batch, seq_len, dtype),
+                "cross_k": ck, "cross_v": cv}
+    return A.init_cache(cfg, kind, batch, seq_len, dtype)
+
+
+def block_decode(params, x, cache, index, cfg: ModelConfig, kind: str):
+    if kind == "ssm":
+        return S.ssm_decode(params["ssm"], x, cache, cfg)
+    if kind == "recurrent":
+        x, cache = R.rglru_decode(params["rec"], x, cache, cfg)
+    elif kind == "cross":
+        x, self_c = A.attention_decode(params["attn"], x, cache["self"],
+                                       index, cfg, "global")
+        x, _ = A.attention_decode(
+            params["xattn"], x, None, index, cfg, "global",
+            kv_override=(cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, self=self_c)
+    else:
+        x, cache = A.attention_decode(params["attn"], x, cache, index, cfg,
+                                      kind)
+    x, _ = _ffn_apply(params["ffn"], x, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stage (scanned repeats of a pattern)
+
+
+def stage_init(key, cfg: ModelConfig, spec: StageSpec):
+    def one_rep(k):
+        kk = jax.random.split(k, len(spec.pattern))
+        return {f"pos{j}": block_init(kk[j], cfg, kind)
+                for j, kind in enumerate(spec.pattern)}
+    keys = jax.random.split(key, spec.repeats)
+    return jax.vmap(one_rep)(keys)
+
+
+def stage_apply(stage_params, x, cfg: ModelConfig, spec: StageSpec, *,
+                positions=None, enc_out=None, q_chunk=512, remat=True,
+                moe_groups=1, moe_ep=None):
+    def body(carry, rep_params):
+        h, aux = carry
+        for j, kind in enumerate(spec.pattern):
+            h, a = block_apply(rep_params[f"pos{j}"], h, cfg, kind,
+                               positions=positions, enc_out=enc_out,
+                               q_chunk=q_chunk, moe_groups=moe_groups,
+                               moe_ep=moe_ep)
+            aux = aux + a
+        return (h, aux), None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), stage_params)
+    return x, aux
+
+
+def stage_init_cache(cfg: ModelConfig, spec: StageSpec, batch, seq_len, dtype,
+                     enc_out=None, stage_params=None):
+    def one_rep(rep_params):
+        return {f"pos{j}": block_init_cache(
+            cfg, kind, batch, seq_len, dtype, enc_out=enc_out,
+            params=None if rep_params is None else rep_params[f"pos{j}"])
+            for j, kind in enumerate(spec.pattern)}
+    if stage_params is None:
+        caches = [one_rep(None) for _ in range(spec.repeats)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches) \
+            if spec.repeats > 1 else jax.tree.map(
+                lambda v: v[None], caches[0])
+    return jax.vmap(one_rep)(stage_params)
+
+
+def stage_decode(stage_params, caches, x, index, cfg: ModelConfig,
+                 spec: StageSpec):
+    def body(h, inp):
+        rep_params, rep_cache = inp
+        new_cache = {}
+        for j, kind in enumerate(spec.pattern):
+            h, nc = block_decode(rep_params[f"pos{j}"], h,
+                                 rep_cache[f"pos{j}"], index, cfg, kind)
+            new_cache[f"pos{j}"] = nc
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stage_params, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Full model
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"emb": L.embedding_init(ks[0], cfg)}
+    p["stages"] = [stage_init(jax.random.fold_in(ks[1], i), cfg, spec)
+                   for i, spec in enumerate(cfg.stages)]
+    p["final_norm"] = L.rmsnorm_init(cfg.d_model, L.dtype_of(cfg))
+    if cfg.is_encoder_decoder:
+        enc_spec = StageSpec(("enc",), cfg.encoder_layers)
+        p["enc_stage"] = stage_init(ks[2], cfg, enc_spec)
+        p["enc_norm"] = L.rmsnorm_init(cfg.d_model, L.dtype_of(cfg))
+    if cfg.frontend == "vision":
+        p["vis_proj"] = L.dense_init(ks[3], VISION_DIM, cfg.d_model,
+                                     L.dtype_of(cfg))
+    return p
+
+
+def _encode(params, frames, cfg: ModelConfig, q_chunk):
+    enc_spec = StageSpec(("enc",), cfg.encoder_layers)
+    h, _ = stage_apply(params["enc_stage"], frames, cfg, enc_spec,
+                       q_chunk=q_chunk)
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig, *, q_chunk=512, remat=True,
+            moe_groups=1, moe_ep=None):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    batch keys: tokens [+ image_embeds | frames].
+    """
+    tokens = batch["tokens"]
+    positions = None
+    enc_out = None
+    if cfg.frontend == "vision":
+        img = (batch["image_embeds"] @ params["vis_proj"]).astype(
+            L.dtype_of(cfg))
+        txt = L.embed(params["emb"], tokens, cfg)
+        x = jnp.concatenate([img, txt], axis=1)
+    elif cfg.is_encoder_decoder:
+        enc_out = _encode(params, batch["frames"].astype(L.dtype_of(cfg)),
+                          cfg, q_chunk)
+        x = L.embed(params["emb"], tokens, cfg)
+    else:
+        x = L.embed(params["emb"], tokens, cfg)
+
+    aux = jnp.float32(0.0)
+    for spec, sp in zip(cfg.stages, params["stages"]):
+        x, a = stage_apply(sp, x, cfg, spec, positions=positions,
+                           enc_out=enc_out, q_chunk=q_chunk, remat=remat,
+                           moe_groups=moe_groups, moe_ep=moe_ep)
+        aux = aux + a
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.frontend == "vision":
+        x = x[:, batch["image_embeds"].shape[1]:]   # logits on text positions
+    logits = L.unembed(params["emb"], x, cfg)
+    return logits, aux
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype, enc_frames=None):
+    """Decode state: per-stage caches + running index."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, enc_frames.astype(L.dtype_of(cfg)), cfg,
+                          512)
+    caches = [stage_init_cache(cfg, spec, batch, seq_len, dtype,
+                               enc_out=enc_out, stage_params=sp)
+              for spec, sp in zip(cfg.stages, params["stages"])]
+    return {"caches": caches, "index": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, token, state, cfg: ModelConfig):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new_state)."""
+    x = L.embed(params["emb"], token, cfg)
+    index = state["index"]
+    new_caches = []
+    for spec, sp, cache in zip(cfg.stages, params["stages"],
+                               state["caches"]):
+        x, nc = stage_decode(sp, cache, x, index, cfg, spec)
+        new_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["emb"], x, cfg)
+    return logits, {"caches": new_caches, "index": index + 1}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+
+def lm_loss(logits, labels, mask=None):
+    """Cross-entropy in f32 with optional validity mask."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

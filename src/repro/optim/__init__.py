@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgd_init,
+                                    sgd_update, apply_updates, global_norm,
+                                    clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, constant_schedule

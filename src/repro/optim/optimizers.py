@@ -1,0 +1,89 @@
+"""Functional optimizers (no external deps): SGD(+momentum) and AdamW.
+
+State and updates are plain pytrees matching the parameter tree, so they
+shard with the same PartitionSpec machinery (plus the ZeRO-1 'data'-axis
+extension in repro.sharding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# SGD (the paper's satellite-side local optimizer, eq. 3)
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                               params)}
+
+
+def sgd_update(grads, state, params, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0, trainable_mask=None):
+    if trainable_mask is not None:
+        grads = jax.tree.map(lambda g, m: g * m, grads, trainable_mask)
+    if momentum == 0.0:
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        new_state = {"step": state["step"] + 1}
+    else:
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        new_state = {"step": state["step"] + 1, "mu": mu}
+    if weight_decay:
+        updates = jax.tree.map(
+            lambda u, p: u - lr * weight_decay * p.astype(jnp.float32),
+            updates, params)
+    return updates, new_state
+
+
+# ---------------------------------------------------------------------------
+# AdamW (datacenter-side training)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    updates = jax.tree.map(
+        lambda m_, v_, p: -lr * ((m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+                                 + weight_decay * p.astype(jnp.float32)),
+        m, v, params)
+    return updates, {"step": step, "m": m, "v": v}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

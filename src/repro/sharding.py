@@ -1,0 +1,166 @@
+"""Sharding rules: parameter, optimizer-state, activation, and decode-cache
+PartitionSpecs for the production meshes (see DESIGN.md §5).
+
+Axes: 'model' = tensor parallel, 'data' = data parallel, 'pod' = pod axis
+(multi-pod only). Batch/tokens shard over the data axes; 2-D weight matrices
+shard their wide dim over 'model'; MoE expert stacks shard the expert dim
+over 'model' when divisible (else per-expert d_ff); optimizer moments get an
+extra 'data' axis (ZeRO-1) on the first divisible dim.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# Leaf-name → role. Roles: col (shard output dim), row (shard input dim),
+# vocab_in, replicate.
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_x", "router",
+        "vis_proj", "conv_w", "w_a", "w_i"}
+_ROW = {"wo", "w_down", "out_proj"}
+
+
+def _data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return e.key
+    return ""
+
+
+def _in_stage(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "stages"
+               for e in path) or any(
+        isinstance(e, jax.tree_util.SequenceKey) for e in path)
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    ndim = leaf.ndim
+    stacked = _in_stage(path) and name not in ("embed", "lm_head")
+    base = ndim - (1 if stacked else 0)
+    ms = _model_size(mesh)
+
+    def ok(dim_size):
+        return dim_size % ms == 0
+
+    spec = [None] * ndim
+    if name == "embed" and ndim == 2:
+        if ok(leaf.shape[0]):
+            spec[0] = "model"
+    elif name == "lm_head" and ndim == 2:
+        if ok(leaf.shape[1]):
+            spec[1] = "model"
+    elif name in ("w_gate", "w_up", "w_down") and base == 3:
+        # MoE expert stack (E, D, F) / (E, F, D)
+        e_dim = ndim - 3
+        if ok(leaf.shape[e_dim]):
+            spec[e_dim] = "model"               # expert parallel
+        elif name in ("w_gate", "w_up") and ok(leaf.shape[ndim - 1]):
+            spec[ndim - 1] = "model"            # mixtral: shard d_ff
+        elif name == "w_down" and ok(leaf.shape[ndim - 2]):
+            spec[ndim - 2] = "model"
+    elif name in _COL and base == 2:
+        if ok(leaf.shape[ndim - 1]):
+            spec[ndim - 1] = "model"
+    elif name in _ROW and base == 2:
+        if ok(leaf.shape[ndim - 2]):
+            spec[ndim - 2] = "model"
+    return P(*spec)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, cfg, mesh), params_shape)
+
+
+def opt_spec_from_param(pspec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard the first unsharded, divisible dim of the
+    AdamW moments over 'data'."""
+    ds = mesh.shape["data"]
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is None and dim % ds == 0 and dim >= ds:
+            spec[i] = "data"
+            break
+    return P(*spec)
+
+
+def opt_state_specs(opt_shape, pspecs, cfg: ModelConfig, mesh: Mesh):
+    def for_moment(tree_shape):
+        return jax.tree.map(
+            lambda leaf, ps: opt_spec_from_param(ps, leaf.shape, mesh),
+            tree_shape, pspecs)
+    return {
+        "step": P(),
+        "m": for_moment(opt_shape["m"]),
+        "v": for_moment(opt_shape["v"]),
+    }
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Shard the leading (batch) dim of every input over the data axes when
+    divisible."""
+    dp = _data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+# §Perf decode optimization (EXPERIMENTS.md hillclimb B): additionally shard
+# the cache feature dim (head_dim / state channels) over 'model' so the
+# scanned cache carry never gets all-gathered, and keep serve-step logits
+# vocab-sharded. Baseline (False) keeps the first-recorded lowering.
+DECODE_OPT = False
+
+
+def decode_state_specs(state_shape, cfg: ModelConfig, mesh: Mesh,
+                       shape: ShapeConfig):
+    """Decode caches: batch over data axes when divisible; for B=1 long
+    decode, shard large cache sequence dims over 'data' instead. With
+    DECODE_OPT, the trailing feature dim also shards over 'model'."""
+    dp = _data_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    ds = mesh.shape["data"]
+    ms = mesh.shape["model"]
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        shp = leaf.shape
+        out = [None] * leaf.ndim
+        # stacked leading layer axis for stage caches
+        start = 1 if _in_stage(path) and leaf.ndim >= 2 else 0
+        bdim = start
+        if bdim < leaf.ndim and shp[bdim] % n == 0 and shp[bdim] >= n:
+            out[bdim] = dp
+        elif leaf.ndim >= start + 2:
+            # batch too small: shard the longest remaining dim (seq) on data
+            cand = max(range(start, leaf.ndim), key=lambda i: shp[i])
+            if shp[cand] % ds == 0 and shp[cand] >= 16384:
+                out[cand] = "data"
+        if DECODE_OPT and leaf.ndim >= start + 2 \
+                and shp[-1] % ms == 0 and out[leaf.ndim - 1] is None:
+            out[leaf.ndim - 1] = "model"
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, state_shape)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

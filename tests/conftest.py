@@ -1,0 +1,19 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the single real CPU device; only the dry-run uses 512
+# virtual devices (see repro/launch/dryrun.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

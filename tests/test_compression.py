@@ -1,0 +1,60 @@
+"""Uplink-compression extension tests (DESIGN.md §5b / paper §5: gradient
+compression is orthogonal to scheduling and combinable)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fl.compression import compress_topk_int8, decompress, roundtrip
+
+
+def test_roundtrip_keeps_topk_exactly_shaped(key):
+    tree = {"a": jax.random.normal(key, (64, 32)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (100,))}
+    out, ratio = roundtrip(tree, k_frac=0.25)
+    assert ratio > 3.0
+    jax.tree.map(lambda a, b: None if a.shape == b.shape else
+                 pytest.fail("shape"), tree, out)
+
+
+def test_topk_preserves_largest_entries(key):
+    x = {"w": jnp.asarray([10.0, -8.0, 0.1, 0.01, 6.0, -0.2, 0.0, 0.3])}
+    out, _ = roundtrip(x, k_frac=0.375)   # keep 3 of 8
+    w = np.asarray(out["w"])
+    # the three largest-magnitude entries survive (int8-quantized)
+    np.testing.assert_allclose(w[[0, 1, 4]], [10.0, -8.0, 6.0], rtol=0.02)
+    assert (w[[2, 3, 5, 6, 7]] == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 200), st.floats(0.05, 1.0))
+def test_quantization_error_bounded(n, k_frac):
+    rng = np.random.default_rng(n)
+    x = {"w": jnp.asarray(rng.normal(0, 1, n).astype(np.float32))}
+    out, ratio = roundtrip(x, k_frac=float(k_frac))
+    w0, w1 = np.asarray(x["w"]), np.asarray(out["w"])
+    kept = w1 != 0
+    # int8 symmetric quantization: relative error on kept entries < 1%
+    # of the max magnitude
+    assert np.abs(w1[kept] - w0[kept]).max() <= \
+        np.abs(w0).max() / 127.0 + 1e-6
+    assert ratio >= 0.79   # int8+idx vs f32 never worse than 0.8x
+
+
+def test_simulation_with_compressed_uplink():
+    from repro.core import connectivity as CN
+    from repro.core.scheduler import make_scheduler
+    from repro.data.fmow import FmowSpec, SyntheticFmow
+    from repro.data.partition import iid_partition
+    from repro.data.pipeline import make_clients
+    from repro.fl.adapters import MlpFmowAdapter
+    from repro.fl.simulation import run_simulation
+    spec = CN.ConstellationSpec(num_satellites=16)
+    C = CN.connectivity_sets(spec, days=0.5)
+    data = SyntheticFmow(FmowSpec(num_train=800, num_val=200))
+    adapter = MlpFmowAdapter(data, make_clients(iid_partition(800, 16, 0)))
+    res = run_simulation(C, adapter, make_scheduler("fedbuff", M=4),
+                         eval_every=16, max_windows=48, uplink_topk=0.25)
+    assert res.num_global_updates >= 1
+    assert res.accuracy[-1] > 1.0 / 62.0   # still learns through compression

@@ -1,0 +1,59 @@
+"""Connectivity-model tests: determinism, physical sanity, and the Fig. 2
+qualitative statistics."""
+import numpy as np
+import pytest
+
+from repro.core import connectivity as CN
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    return CN.ConstellationSpec(num_satellites=24)
+
+
+def test_deterministic(small_spec):
+    C1 = CN.connectivity_sets(small_spec, days=0.5)
+    C2 = CN.connectivity_sets(small_spec, days=0.5)
+    assert (C1 == C2).all()
+
+
+def test_orbit_radius_and_period(small_spec):
+    times = np.arange(0, 6000, 60.0)
+    pos = CN.satellite_positions_eci(small_spec, times)
+    r = np.linalg.norm(pos, axis=-1)
+    # circular orbits at their configured altitudes
+    assert r.min() > CN.R_EARTH + 400_000 - 1
+    assert r.max() < CN.R_EARTH + 480_000 + 1
+    # LEO period ~ 5500-5700 s: position approximately repeats
+    n = np.sqrt(CN.MU / (CN.R_EARTH + 475_000) ** 3)
+    period = 2 * np.pi / n
+    assert 5400 < period < 5800
+
+
+def test_ground_stations_rotate(small_spec):
+    t = np.array([0.0, 43200.0])   # half a day: Earth rotates ~180 deg
+    gs = CN.ground_positions_eci(small_spec, t)
+    equatorish = np.argmin(np.abs([g[1] for g in
+                                   small_spec.ground_stations]))
+    v0, v1 = gs[0, equatorish, :2], gs[1, equatorish, :2]
+    cos = v0 @ v1 / (np.linalg.norm(v0) * np.linalg.norm(v1))
+    assert cos < -0.9   # roughly opposite side
+
+
+def test_fig2_statistics_full_constellation():
+    spec = CN.ConstellationSpec()        # 191 sats, 12 GS
+    C = CN.connectivity_sets(spec, days=1.0)
+    st = CN.connectivity_stats(C)
+    # paper Fig. 2: |C_i| varies widely (4..68); n_k in [5, 19]
+    assert C.shape == (96, 191)
+    assert st["ci_max"] > 2 * st["ci_min"] + 1, "no time heterogeneity"
+    assert st["nk_min"] >= 2 and st["nk_max"] <= 30
+    assert st["nk_max"] >= 1.5 * st["nk_min"], "no satellite heterogeneity"
+
+
+def test_higher_elevation_less_connectivity(small_spec):
+    import dataclasses
+    lo = CN.connectivity_sets(small_spec, days=0.25)
+    hi_spec = dataclasses.replace(small_spec, min_elevation_deg=70.0)
+    hi = CN.connectivity_sets(hi_spec, days=0.25)
+    assert hi.sum() < lo.sum()

@@ -1,0 +1,116 @@
+"""Per-kernel validation (deliverable c): shape/dtype sweeps asserting
+allclose against the pure-jnp oracles, interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.agg.kernel import weighted_aggregate
+from repro.kernels.agg.ops import aggregate_params_tree, \
+    weighted_aggregate_tree
+from repro.kernels.agg.ref import weighted_aggregate_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# aggregation kernel
+
+
+@pytest.mark.parametrize("m", [1, 7, 64, 191])
+@pytest.mark.parametrize("n", [128, 5000, 40_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_agg_sweep(m, n, dtype, key):
+    upd = jax.random.normal(key, (m, n), dtype)
+    p = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (m,), jnp.float32)
+    w = w / w.sum()
+    out = weighted_aggregate(p, upd, w, block=4096, interpret=True)
+    ref = weighted_aggregate_ref(p, upd, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_agg_tree_paths(key):
+    tree = {"a": jax.random.normal(key, (5, 16, 8)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (5, 33))}}
+    w = jnp.asarray([0.5, 0.2, 0.1, 0.1, 0.1])
+    got = weighted_aggregate_tree(tree, w, interpret=True)
+    ref = jax.tree.map(lambda u: jnp.tensordot(w, u, axes=1), tree)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5), got, ref)
+
+    params = jax.tree.map(lambda u: u[0], tree)
+    got2 = aggregate_params_tree(params, tree, w, interpret=True)
+    ref2 = jax.tree.map(lambda p, d: p + d, params, ref)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5), got2, ref2)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm kernel
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (3, 5, 256), (37, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype, key):
+    x = jax.random.normal(key, shape, dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],), dtype)
+    out = rmsnorm(x, s, rows=8, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+
+
+@pytest.mark.parametrize("h,k", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32),
+                                           (False, 0)])
+def test_flash_gqa_mask_sweep(h, k, causal, window, key):
+    B, S, hd = 2, 128, 64
+    q = jax.random.normal(key, (B, h, S, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, k, S, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (B, k, S, hd))
+    out = flash_attention(q, kk, vv, causal=causal, window=window, bq=32,
+                          bk=32, interpret=True)
+    ref = attention_ref(q, kk, vv, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,sk", [(64, 64), (100, 200), (64, 192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_shape_dtype_sweep(sq, sk, dtype, key):
+    B, H, hd = 1, 2, 128
+    q = jax.random.normal(key, (B, H, sq, hd), dtype)
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, H, sk, hd), dtype)
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (B, H, sk, hd), dtype)
+    out = flash_attention(q, kk, vv, causal=False, bq=32, bk=64,
+                          interpret=True)
+    ref = attention_ref(q, kk, vv, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_block_shape_invariance(key):
+    """Output must not depend on the BlockSpec tiling."""
+    B, H, S, hd = 1, 2, 256, 64
+    q = jax.random.normal(key, (B, H, S, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, hd))
+    outs = [flash_attention(q, kk, vv, causal=True, bq=bq, bk=bk,
+                            interpret=True)
+            for bq, bk in [(32, 32), (64, 128), (256, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5)

@@ -1,0 +1,79 @@
+"""Scheduler and schedule-search tests: candidate generation bounds, search
+improvement over random, regressor fitting, and scheduler indicator
+semantics (eqs. 5-7)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import staleness as SS
+from repro.core.scheduler import (AsyncScheduler, FedBuffScheduler,
+                                  SyncScheduler)
+from repro.core.search import random_candidates, score_candidates
+from repro.core.utility import (MLPRegressor, RandomForestRegressor,
+                                featurize)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 5), st.integers(5, 10),
+       st.integers(1, 64))
+def test_candidates_within_range(I0, nmin, nmax, R):
+    rng = np.random.default_rng(0)
+    c = random_candidates(rng, I0, nmin, nmax, R)
+    assert c.shape == (R, I0)
+    counts = c.sum(axis=1)
+    assert (counts >= min(nmin, I0)).all()
+    assert (counts <= min(nmax, I0)).all()
+
+
+def test_indicators():
+    assert SyncScheduler().decide(0, n_in_buffer=5, K=5)
+    assert not SyncScheduler().decide(0, n_in_buffer=4, K=5)
+    assert AsyncScheduler().decide(0, n_in_buffer=1)
+    assert not AsyncScheduler().decide(0, n_in_buffer=0)
+    fb = FedBuffScheduler(M=3)
+    assert fb.decide(0, n_in_buffer=3) and not fb.decide(0, n_in_buffer=2)
+
+
+def test_regressors_fit_quadratic():
+    rng = np.random.default_rng(1)
+    X = rng.random((400, 6)).astype(np.float32)
+    y = (X[:, 0] - 0.5) ** 2 * 4 + X[:, 3]
+    for reg in (RandomForestRegressor(n_trees=20, max_depth=6, seed=1),
+                MLPRegressor(steps=600, seed=1)):
+        reg.fit(X, y)
+        pred = reg.predict(X)
+        r2 = 1 - np.sum((pred - y) ** 2) / np.sum((y - y.mean()) ** 2)
+        assert r2 > 0.7, type(reg).__name__
+
+
+def test_featurize_shapes():
+    # hist (s_max+1=9) + total + fresh_mass + mean_stale + status = 13
+    f = featurize(np.zeros((5, 9)), 1.5)
+    assert f.shape == (5, 13)
+    assert (f[:, -1] == 1.5).all()
+    # derived features: fresh-weighted mass respects c(s) decay
+    h = np.zeros(9); h[0] = 2; h[3] = 2
+    f2 = featurize(h[None], 0.0)[0]
+    assert f2[9] == 4.0                       # total
+    assert 2.0 < f2[10] < 4.0                 # fresh mass in (c(3)*4, 4)
+    assert abs(f2[11] - 1.5) < 1e-6           # mean staleness
+
+
+class _FreshGradientOracle:
+    """True utility: fresh gradients help, stale ones hurt."""
+
+    def predict(self, X):
+        hist = X[:, :-2]
+        s = np.arange(hist.shape[1])
+        return (hist * (1.0 - 0.4 * s)).sum(axis=1)
+
+
+def test_search_beats_random_average():
+    rng = np.random.default_rng(2)
+    K, I0 = 30, 24
+    C = rng.random((I0, K)) < 0.25
+    state = SS.bootstrap_state(K)
+    cands = random_candidates(rng, I0, 4, 8, 256)
+    scores = score_candidates(cands, C, state, 0, _FreshGradientOracle(),
+                              status=1.0)
+    assert scores.max() > np.mean(scores) + 1e-6

@@ -1,0 +1,135 @@
+"""Protocol-semantics tests for the staleness/idleness machinery, including
+a transcription of the paper's illustrative example (Fig. 3 / Table 1) and
+hypothesis property tests on the invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import staleness as SS
+
+# ---------------------------------------------------------------------------
+# The paper's illustrative example (Appendix A): 3 satellites, 9 windows.
+# Figure 3 connectivity (green circles): satellite k connected at windows:
+#   SA1: 0, 2, 4, 6, 8
+#   SA2: 1, 3, 5, 7
+#   SA3: 0, 7
+PAPER_C = np.zeros((9, 3), bool)
+PAPER_C[[0, 2, 4, 6, 8], 0] = True
+PAPER_C[[1, 3, 5, 7], 1] = True
+PAPER_C[[0, 7], 2] = True
+
+
+def _run(a):
+    # cold start, as in the paper's example: satellites first download at
+    # their first contact and upload at a later one
+    state = SS.init_state(3)
+    st_, ig, infos = SS.simulate_window(jnp.asarray(PAPER_C),
+                                        jnp.asarray(a, np.int32), state,
+                                        jnp.int32(0))
+    return int(ig), {k: np.asarray(v) for k, v in infos.items()}
+
+
+def test_paper_example_async():
+    """Async FL (Fig. 3b / Table 1): aggregate whenever the buffer is
+    non-empty. Paper: 8 aggregated gradients, max staleness 5 (SA3 at i=7),
+    zero idle connections. (Our protocol has no training-latency windows —
+    see DESIGN.md §7 — so the per-staleness split differs slightly, but the
+    totals and the extreme match.)"""
+    a = np.ones(9, np.int32)
+    ig, infos = _run(a)
+    hist = infos["hist"].sum(axis=0)
+    assert infos["n_idle"].sum() == 0
+    assert infos["max_staleness"].max() == 5   # SA3: base v0, 5 aggs later
+    assert hist.sum() == 8                      # Table 1 Async total
+
+
+def test_paper_example_sync():
+    """Sync FL (Fig. 3a): single aggregation once all three have uploaded
+    (at i=7); all gradients have staleness 0; 3 aggregated gradients
+    (Table 1 Sync). Idle connections: 4 under our latency-free protocol —
+    SA1 at i=4,6 and SA2 at i=5,7 (the paper counts 5 with its
+    training-latency diagram)."""
+    a = np.zeros(9, np.int32)
+    a[7] = 1
+    ig, infos = _run(a)
+    assert ig == 1
+    hist = infos["hist"].sum(axis=0)
+    assert hist[0] == 3 and hist[1:].sum() == 0
+    assert infos["n_idle"].sum() == 4
+
+
+def test_paper_example_fedbuff_like():
+    """FedBuff M=2 (Fig. 4): aggregate when the buffer reaches 2; the paper
+    reports max staleness dropping from 5 (async) to 2 and no idle
+    connections. Under our latency-free protocol the same schedule yields 6
+    aggregated gradients (every upload used, none idle)."""
+    a = np.zeros(9, np.int32)
+    a[[3, 5, 7]] = 1
+    ig, infos = _run(a)
+    assert infos["n_idle"].sum() == 0
+    assert infos["max_staleness"].max() == 2   # SA3 base v0 aggregated at ig=2
+    assert infos["hist"].sum() == 6            # every upload aggregated
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+
+
+@st.composite
+def _scenario(draw):
+    K = draw(st.integers(2, 8))
+    I = draw(st.integers(4, 20))
+    C = np.array(draw(st.lists(st.lists(st.booleans(), min_size=K,
+                                        max_size=K), min_size=I,
+                               max_size=I)), bool)
+    a = np.array(draw(st.lists(st.integers(0, 1), min_size=I, max_size=I)),
+                 np.int32)
+    return C, a
+
+
+@settings(max_examples=60, deadline=None)
+@given(_scenario())
+def test_invariants(scn):
+    C, a = scn
+    I, K = C.shape
+    state = SS.bootstrap_state(K)
+    st_, ig, infos = SS.simulate_window(jnp.asarray(C), jnp.asarray(a),
+                                        state, jnp.int32(0))
+    hist = np.asarray(infos["hist"])
+    n_agg = np.asarray(infos["n_aggregated"])
+    # 1. ig advances at most once per scheduled aggregation (empty-buffer
+    # aggregations are no-ops)
+    assert int(ig) <= int(a.sum())
+    # 2. per-window histogram totals equal n_aggregated
+    assert (hist.sum(axis=1) == n_agg).all()
+    # 3. each satellite contributes at most one gradient per aggregation
+    assert (n_agg <= K).all()
+    # 4. gradients aggregated never exceed number of uploads possible
+    assert n_agg.sum() <= C.sum()
+    # 5. staleness bounded by number of prior aggregations
+    msv = np.asarray(infos["max_staleness"])
+    prior = np.concatenate([[0], np.cumsum(a)[:-1]])
+    assert (msv <= prior).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(_scenario())
+def test_aggregate_every_window_zero_staleness_beyond_one(scn):
+    """If we aggregate every window, staleness of an upload is bounded by
+    the number of aggregations since the satellite's last download."""
+    C, _ = scn
+    I, K = C.shape
+    a = np.ones(I, np.int32)
+    state = SS.bootstrap_state(K)
+    _, _, infos = SS.simulate_window(jnp.asarray(C), jnp.asarray(a), state,
+                                     jnp.int32(0))
+    # with aggregation every window, idle connections are impossible
+    assert np.asarray(infos["n_idle"]).sum() == 0
+
+
+def test_compensation_function():
+    s = jnp.arange(10)
+    c = SS.staleness_compensation(s, alpha=0.5)
+    assert float(c[0]) == 1.0
+    assert (np.diff(np.asarray(c)) < 0).all()   # monotonically decreasing
