@@ -1,58 +1,47 @@
-"""Shared world-building for the FL benchmarks: constellation, connectivity,
-dataset, partitions, adapters, and the FedSpace regressor setup."""
+"""Shared world-building for the FL benchmarks, now a thin veneer over the
+declarative `repro.fl.api` layer (plus results-dir helpers).
+
+`build_fedspace_scheduler` moved into product code
+(`repro.fl.fedspace_setup`) — re-exported here for back compat.
+"""
 from __future__ import annotations
 
 import json
 import os
-import time
 
-import numpy as np
-
-from repro.core import connectivity as CN
-from repro.core.scheduler import make_scheduler
-from repro.data.fmow import FmowSpec, SyntheticFmow
-from repro.data.partition import iid_partition, noniid_partition
-from repro.data.pipeline import make_clients
-from repro.fl import fedspace_setup as FS
-from repro.fl.adapters import MlpFmowAdapter
-from repro.fl.simulation import run_simulation
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          FLExperiment, Federation, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.fedspace_setup import build_fedspace_scheduler  # noqa: F401
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+def world_experiment(*, K: int = 191, days: float = 5.0,
+                     num_train: int = 36_000, num_val: int = 5_304,
+                     noise: float = 0.9, hidden: int = 64,
+                     setting: str = "iid", seed: int = 0) -> FLExperiment:
+    """The benchmarks' canonical world as a declarative experiment (the
+    scheduler is swapped per-scheme with `Federation.with_scheduler`)."""
+    return FLExperiment(
+        name=f"bench-{setting}-K{K}",
+        constellation=ConstellationConfig(num_satellites=K, days=days),
+        dataset=DatasetConfig(num_train=num_train, num_val=num_val,
+                              noise=noise),
+        partition=PartitionConfig(kind=setting),
+        adapter=AdapterConfig(kind="mlp", params={"hidden": hidden}),
+        scheduler=SchedulerConfig(kind="async"),
+        seed=seed,
+    )
+
+
 def build_world(*, K: int = 191, days: float = 5.0, num_train: int = 36_000,
                 num_val: int = 5_304, setting: str = "iid", seed: int = 0):
-    spec = CN.ConstellationSpec(num_satellites=K)
-    C = CN.connectivity_sets(spec, days=days)
-    data = SyntheticFmow(FmowSpec(num_train=num_train, num_val=num_val))
-    if setting == "iid":
-        parts = iid_partition(num_train, K, seed)
-    else:
-        parts = noniid_partition(data.train_zones, K, spec, days=days,
-                                 seed=seed)
-    adapter = MlpFmowAdapter(data, make_clients(parts))
-    return spec, C, data, adapter
-
-
-def build_fedspace_scheduler(adapter, *, I0=24, n_min=None, n_max=None,
-                             num_candidates=5000, regressor_kind="rf",
-                             pretrain_rounds=40, utility_samples=250,
-                             local_steps=16, client_lr=1.0,
-                             clients_per_round=24, seed=0):
-    traj = FS.pretrain_trajectory(adapter, rounds=pretrain_rounds,
-                                  clients_per_round=clients_per_round,
-                                  local_steps=local_steps,
-                                  client_lr=client_lr, seed=seed)
-    reg, diag = FS.fit_utility_regressor(adapter, traj,
-                                         kind=regressor_kind,
-                                         n_samples=utility_samples,
-                                         local_steps=local_steps,
-                                         client_lr=client_lr,
-                                         seed=seed)
-    sched = make_scheduler("fedspace", regressor=reg, I0=I0, n_min=n_min,
-                           n_max=n_max, num_candidates=num_candidates,
-                           seed=seed)
-    return sched, diag
+    """Back-compat tuple view (spec, C, data, adapter) of the wired world."""
+    fed = Federation.from_experiment(world_experiment(
+        K=K, days=days, num_train=num_train, num_val=num_val,
+        setting=setting, seed=seed))
+    return fed.spec, fed.C, fed.data, fed.adapter
 
 
 def save_json(name: str, obj) -> str:

@@ -1,7 +1,8 @@
 """Paper Table 2 (+ Fig. 6 curves + Fig. 7 staleness/idleness histograms):
 training time (simulated days) to a target top-1 accuracy for Sync / Async /
 FedBuff / FedSpace over the 191-satellite, 12-ground-station constellation,
-IID and Non-IID.
+IID and Non-IID — declared once via `repro.fl.api` and raced per-scheme
+with `Federation.with_scheduler`.
 
 Calibrated world (see DESIGN.md §7): synthetic fMoW at 9.6k train samples,
 62 classes, feature-MLP global model, client SGD lr=1.0, E=16 local steps —
@@ -15,15 +16,13 @@ Usage: PYTHONPATH=src:. python -m benchmarks.table2_training_time
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
-from benchmarks.common import build_fedspace_scheduler, build_world, \
-    save_json
-from repro.core.scheduler import make_scheduler
-from repro.fl.simulation import run_simulation
+from benchmarks.common import save_json, world_experiment
+from repro.fl.api import Federation, SchedulerConfig
+from repro.fl.engine import EngineConfig
 
 TARGET_ACC = 0.40
 CLIENT_LR = 1.0
@@ -36,47 +35,42 @@ EVAL_EVERY = 24           # 6 simulated hours
 DEFAULT_SCHEMES = ["sync", "async", "fedbuff", "fedspace"]
 
 
-def build_adapter(setting: str, seed: int = 0):
-    from repro.core import connectivity as CN
-    from repro.data.fmow import FmowSpec, SyntheticFmow
-    from repro.data.partition import iid_partition, noniid_partition
-    from repro.data.pipeline import make_clients
-    from repro.fl.adapters import MlpFmowAdapter
-
-    spec = CN.ConstellationSpec(num_satellites=191)
-    C = CN.connectivity_sets(spec, days=5.0)
-    data = SyntheticFmow(FmowSpec(num_train=NUM_TRAIN, num_val=NUM_VAL,
-                                  noise=NOISE))
-    parts = (iid_partition(NUM_TRAIN, 191, seed) if setting == "iid" else
-             noniid_partition(data.train_zones, 191, spec, days=5.0,
-                              seed=seed))
-    adapter = MlpFmowAdapter(data, make_clients(parts), hidden=HIDDEN)
-    return C, adapter
+def build_federation(setting: str, seed: int = 0) -> Federation:
+    exp = world_experiment(K=191, days=5.0, num_train=NUM_TRAIN,
+                           num_val=NUM_VAL, noise=NOISE, hidden=HIDDEN,
+                           setting=setting, seed=seed)
+    exp.train = EngineConfig(local_steps=LOCAL_STEPS, client_lr=CLIENT_LR,
+                             eval_every=EVAL_EVERY, target_acc=TARGET_ACC,
+                             stop_at_target=True)
+    return Federation.from_experiment(exp)
 
 
-def make_scheme(name: str, adapter, seed: int = 0):
+class _RandomUtility:
+    """Ablation oracle: FedSpace's aggregation *rate* without its
+    utility-driven placement."""
+
+    def predict(self, X):
+        rng = np.random.default_rng(int(abs(X.sum()) * 1e4) % 2**31)
+        return rng.random(len(X))
+
+
+def scheme_config(name: str, seed: int = 0) -> SchedulerConfig:
     if name == "fedspace":
-        sched, diag = build_fedspace_scheduler(
-            adapter, I0=24, n_min=None, n_max=None,   # inferred from û
-            num_candidates=3000, pretrain_rounds=40,
-            utility_samples=200, seed=seed)
-        # regenerate regressor with matched local hyperparameters
-        return sched, diag
-    if name == "fedbuff":
-        return make_scheduler("fedbuff", M=96), {}
-    if name == "periodic":
-        return make_scheduler("periodic", period=4), {}
+        return SchedulerConfig(
+            "fedspace",
+            params={"I0": 24, "n_min": None, "n_max": None,  # from û
+                    "num_candidates": 3000, "seed": seed},
+            setup={"pretrain_rounds": 40, "utility_samples": 200})
     if name == "fedspace-random":
-        # ablation: FedSpace's aggregation *rate* without its utility-driven
-        # placement — random n_agg ~ U[4,8] positions per window of 24
-        class _RandomUtility:
-            def predict(self, X):
-                rng = np.random.default_rng(int(abs(X.sum()) * 1e4) % 2**31)
-                return rng.random(len(X))
-        return make_scheduler("fedspace", regressor=_RandomUtility(), I0=24,
-                              n_min=4, n_max=8, num_candidates=1,
-                              seed=seed), {}
-    return make_scheduler(name), {}
+        return SchedulerConfig(
+            "fedspace", params={"regressor": _RandomUtility(), "I0": 24,
+                                "n_min": 4, "n_max": 8,
+                                "num_candidates": 1, "seed": seed})
+    if name == "fedbuff":
+        return SchedulerConfig("fedbuff", params={"M": 96})
+    if name == "periodic":
+        return SchedulerConfig("periodic", params={"period": 4})
+    return SchedulerConfig(name)
 
 
 def run_table2(settings, schemes, *, max_days: float = 20.0, seed: int = 0):
@@ -84,16 +78,14 @@ def run_table2(settings, schemes, *, max_days: float = 20.0, seed: int = 0):
     curves = {}
     max_windows = int(max_days * 96)
     for setting in settings:
-        C, adapter = build_adapter(setting, seed)
-        repeat = int(np.ceil(max_windows / C.shape[0]))
+        base = build_federation(setting, seed)
+        base.experiment.train.max_windows = max_windows
+        base.experiment.train.repeat_connectivity = 0   # auto-tile C
         for scheme in schemes:
             t0 = time.time()
-            sched, diag = make_scheme(scheme, adapter, seed)
-            res = run_simulation(
-                C, adapter, sched, client_lr=CLIENT_LR,
-                local_steps=LOCAL_STEPS, eval_every=EVAL_EVERY,
-                target_acc=TARGET_ACC, max_windows=max_windows,
-                repeat_connectivity=repeat, stop_at_target=True, seed=seed)
+            fed = base.with_scheduler(scheme_config(scheme, seed))
+            res = fed.run()
+            diag = fed.scheduler_diag
             row = {
                 "setting": setting, "scheme": scheme,
                 "target_acc": TARGET_ACC,

@@ -1,59 +1,56 @@
-"""Quickstart: FedSpace in ~60 seconds on CPU.
+"""Quickstart: FedSpace in ~60 seconds on CPU, via the declarative API.
 
-Builds a small 40-satellite constellation, partitions a synthetic fMoW-like
-dataset non-IID by ground track, trains the utility regressor, and runs the
-FedSpace scheduler against FedBuff — printing time-to-target for both.
+Declares one `FLExperiment` — a small 40-satellite constellation, a
+synthetic fMoW-like dataset partitioned non-IID by ground track, the MLP
+adapter — builds it once with `Federation.from_experiment`, then swaps
+aggregation policies with `with_scheduler` to race FedSpace against
+FedBuff, printing time-to-target for both.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
-import numpy as np
-
 from repro.core import connectivity as CN
-from repro.core.scheduler import make_scheduler
-from repro.data.fmow import FmowSpec, SyntheticFmow
-from repro.data.partition import noniid_partition
-from repro.data.pipeline import make_clients
-from repro.fl import fedspace_setup as FS
-from repro.fl.adapters import MlpFmowAdapter
-from repro.fl.simulation import run_simulation
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          FLExperiment, Federation, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig
 
 
 def main():
     t0 = time.time()
-    print("1. deterministic constellation (40 satellites, 12 GS)...")
-    spec = CN.ConstellationSpec(num_satellites=40)
-    C = CN.connectivity_sets(spec, days=3.0)
-    st = CN.connectivity_stats(C)
+    exp = FLExperiment(
+        name="quickstart",
+        constellation=ConstellationConfig(num_satellites=40, days=3.0),
+        dataset=DatasetConfig(num_train=4000, num_val=1000, noise=2.2),
+        partition=PartitionConfig(kind="noniid"),
+        adapter=AdapterConfig(kind="mlp", params={"hidden": 48}),
+        scheduler=SchedulerConfig(kind="fedbuff", params={"M": 20}),
+        train=EngineConfig(local_steps=16, client_lr=1.0, eval_every=12,
+                           target_acc=0.35, max_windows=288),
+    )
+
+    print("1. building the federation (constellation, data, adapter)...")
+    fed = Federation.from_experiment(exp)
+    st = CN.connectivity_stats(fed.C)
     print(f"   |C_i| in [{st['ci_min']}, {st['ci_max']}], "
           f"contacts/day in [{st['nk_min']:.0f}, {st['nk_max']:.0f}]")
 
-    print("2. synthetic fMoW, non-IID by ground-track visits...")
-    data = SyntheticFmow(FmowSpec(num_train=4000, num_val=1000, noise=2.2))
-    parts = noniid_partition(data.train_zones, 40, spec, days=3.0)
-    adapter = MlpFmowAdapter(data, make_clients(parts), hidden=48)
-
-    print("3. FedSpace phase 1: source trajectory + utility regressor...")
-    traj = FS.pretrain_trajectory(adapter, rounds=25, local_steps=16,
-                                  client_lr=1.0)
-    reg, diag = FS.fit_utility_regressor(adapter, traj, n_samples=120,
-                                         local_steps=16, client_lr=1.0)
-    print(f"   random-forest fit R^2={diag['r2_in_sample']:.2f} "
-          f"on {diag['n']} (s, T) -> dF samples")
-
-    print("4. schedulers over the constellation (target 35% top-1)...")
-    for name, sched in [
-        ("fedbuff", make_scheduler("fedbuff", M=20)),
-        ("fedspace", make_scheduler("fedspace", regressor=reg, I0=24,
-                                    n_min=4, n_max=8,
-                                    num_candidates=500)),
-    ]:
-        res = run_simulation(C, adapter, sched, client_lr=1.0,
-                             local_steps=16, eval_every=12,
-                             target_acc=0.35, max_windows=288)
+    print("2. schedulers over the constellation (target 35% top-1)...")
+    feds = [fed, fed.with_scheduler(SchedulerConfig(
+        kind="fedspace",
+        params={"I0": 24, "n_min": 4, "n_max": 8, "num_candidates": 500},
+        setup={"pretrain_rounds": 25, "clients_per_round": 16,
+               "utility_samples": 120, "local_steps": 16,
+               "client_lr": 1.0}))]
+    if feds[1].scheduler_diag:
+        d = feds[1].scheduler_diag
+        print(f"   fedspace phase 1: regressor R^2="
+              f"{d['r2_in_sample']:.2f} on {d['n']} (s, T) -> dF samples")
+    for f in feds:
+        res = f.run()
         d = res.time_to_target_days
-        print(f"   {name:9s} days_to_35%={d if d else 'not reached'} "
+        print(f"   {res.scheme:9s} days_to_35%={d if d else 'not reached'} "
               f"updates={res.num_global_updates} "
               f"idle={res.idle_connections}/{res.total_connections} "
               f"staleness_hist={res.staleness_hist.tolist()}")

@@ -14,40 +14,39 @@ Run:  PYTHONPATH=src python examples/satellite_fl_train.py [--part a|b|all]
 import argparse
 import time
 
-import numpy as np
-
-from repro.core import connectivity as CN
-from repro.core.scheduler import make_scheduler
-from repro.data.fmow import FmowSpec, SyntheticFmow
-from repro.data.partition import noniid_partition
-from repro.data.pipeline import make_clients
-from repro.fl import fedspace_setup as FS
-from repro.fl.adapters import DenseNetFmowAdapter
-from repro.fl.simulation import run_simulation
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          FLExperiment, Federation, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig
 
 
 def part_a():
     print("=== Part A: federated DenseNet (the paper's model family) ===")
     t0 = time.time()
-    K = 48
-    spec = CN.ConstellationSpec(num_satellites=K)
-    C = CN.connectivity_sets(spec, days=2.0)
-    data = SyntheticFmow(FmowSpec(num_train=3000, num_val=600,
-                                  image_size=16, noise=1.0))
-    parts = noniid_partition(data.train_zones, K, spec, days=2.0)
-    adapter = DenseNetFmowAdapter(data, make_clients(parts), growth=8,
-                                  blocks=(2, 2, 2), stem=16,
-                                  frozen_blocks=1)   # paper: frozen prefix
-    traj = FS.pretrain_trajectory(adapter, rounds=10, clients_per_round=8,
-                                  local_steps=8, client_lr=0.3)
-    reg, diag = FS.fit_utility_regressor(adapter, traj, n_samples=40,
-                                         clients_per_sample=6,
-                                         local_steps=8, client_lr=0.3)
-    print(f"utility regressor R^2={diag['r2_in_sample']:.2f}")
-    sched = make_scheduler("fedspace", regressor=reg, I0=24, n_min=4,
-                           n_max=8, num_candidates=300)
-    res = run_simulation(C, adapter, sched, client_lr=0.3, local_steps=8,
-                         eval_every=24, max_windows=144)
+    exp = FLExperiment(
+        name="satellite_fl_densenet",
+        constellation=ConstellationConfig(num_satellites=48, days=2.0),
+        dataset=DatasetConfig(num_train=3000, num_val=600, image_size=16,
+                              noise=1.0),
+        partition=PartitionConfig(kind="noniid"),
+        adapter=AdapterConfig(kind="densenet",
+                              params={"growth": 8, "blocks": (2, 2, 2),
+                                      "stem": 16,
+                                      "frozen_blocks": 1}),  # paper §4.1
+        scheduler=SchedulerConfig(
+            kind="fedspace",
+            params={"I0": 24, "n_min": 4, "n_max": 8,
+                    "num_candidates": 300},
+            setup={"pretrain_rounds": 10, "clients_per_round": 8,
+                   "utility_samples": 40, "clients_per_sample": 6,
+                   "local_steps": 8, "client_lr": 0.3}),
+        train=EngineConfig(local_steps=8, client_lr=0.3, eval_every=24,
+                           max_windows=144),
+    )
+    fed = Federation.from_experiment(exp)
+    print(f"utility regressor "
+          f"R^2={fed.scheduler_diag['r2_in_sample']:.2f}")
+    res = fed.run()
     # NB: the compact CNN on noisy synthetic imagery needs thousands of
     # local steps to climb (chance = 1.6%); this 1.5-simulated-day demo
     # shows the full paper pipeline end-to-end — the calibrated

@@ -1,51 +1,51 @@
-"""Scheduler comparison (paper Figs. 6-7 in miniature): run all four
-schedulers (+ the beyond-paper periodic baseline) on one 64-satellite world
-and print the accuracy-vs-days table and the staleness/idleness profile.
+"""Scheduler comparison (paper Figs. 6-7 in miniature): one declarative
+64-satellite world, every registered policy raced over it via
+`Federation.with_scheduler` — constellation, data, and adapter built once
+and shared across all runs.
 
     PYTHONPATH=src python examples/scheduler_comparison.py
 """
 import time
 
-import numpy as np
-
-from repro.core import connectivity as CN
-from repro.core.scheduler import make_scheduler
-from repro.data.fmow import FmowSpec, SyntheticFmow
-from repro.data.partition import noniid_partition
-from repro.data.pipeline import make_clients
-from repro.fl import fedspace_setup as FS
-from repro.fl.adapters import MlpFmowAdapter
-from repro.fl.simulation import run_simulation
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          FLExperiment, Federation, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig
 
 
 def main():
-    K = 64
-    spec = CN.ConstellationSpec(num_satellites=K)
-    C = CN.connectivity_sets(spec, days=4.0)
-    data = SyntheticFmow(FmowSpec(num_train=6000, num_val=1200, noise=2.2))
-    parts = noniid_partition(data.train_zones, K, spec, days=4.0)
-    adapter = MlpFmowAdapter(data, make_clients(parts), hidden=48)
-
-    traj = FS.pretrain_trajectory(adapter, rounds=30, local_steps=16,
-                                  client_lr=1.0)
-    reg, _ = FS.fit_utility_regressor(adapter, traj, n_samples=150,
-                                      local_steps=16, client_lr=1.0)
+    exp = FLExperiment(
+        name="scheduler_comparison",
+        constellation=ConstellationConfig(num_satellites=64, days=4.0),
+        dataset=DatasetConfig(num_train=6000, num_val=1200, noise=2.2),
+        partition=PartitionConfig(kind="noniid"),
+        adapter=AdapterConfig(kind="mlp", params={"hidden": 48}),
+        scheduler=SchedulerConfig(kind="sync"),
+        train=EngineConfig(local_steps=16, client_lr=1.0, eval_every=24,
+                           max_windows=384),
+    )
+    base = Federation.from_experiment(exp)
     scheds = [
-        ("sync", make_scheduler("sync")),
-        ("async", make_scheduler("async")),
-        ("fedbuff", make_scheduler("fedbuff", M=32)),
-        ("periodic", make_scheduler("periodic", period=4)),
-        ("fedspace", make_scheduler("fedspace", regressor=reg, I0=24,
-                                    n_min=4, n_max=8, num_candidates=800)),
+        SchedulerConfig("sync"),
+        SchedulerConfig("async"),
+        SchedulerConfig("fedbuff", params={"M": 32}),
+        SchedulerConfig("periodic", params={"period": 4}),
+        SchedulerConfig("fedspace",
+                        params={"I0": 24, "n_min": 4, "n_max": 8,
+                                "num_candidates": 800},
+                        setup={"pretrain_rounds": 30, "clients_per_round": 16,
+                               "utility_samples": 150, "local_steps": 16,
+                               "client_lr": 1.0}),
     ]
+    # build every policy first (FedSpace phase 1 runs here) so the timed
+    # loop below compares simulation time only
+    feds = [base.with_scheduler(cfg) for cfg in scheds]
     print(f"{'scheme':10s} {'final':>6s} {'best':>6s} {'upd':>5s} "
           f"{'idle':>10s}  staleness histogram (0..8+)")
-    for name, sched in scheds:
+    for fed in feds:
         t0 = time.time()
-        res = run_simulation(C, adapter, sched, client_lr=1.0,
-                             local_steps=16, eval_every=24,
-                             max_windows=384)
-        print(f"{name:10s} {res.accuracy[-1]:6.3f} "
+        res = fed.run()
+        print(f"{res.scheme:10s} {res.accuracy[-1]:6.3f} "
               f"{max(res.accuracy):6.3f} {res.num_global_updates:5d} "
               f"{res.idle_connections:4d}/{res.total_connections:5d}  "
               f"{res.staleness_hist.tolist()}  ({time.time() - t0:.0f}s)")

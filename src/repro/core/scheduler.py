@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import staleness as SS
 from repro.core.search import fedspace_search
+from repro.fl.registry import SCHEDULERS, register_scheduler
 
 
 class Scheduler:
@@ -25,6 +26,7 @@ class Scheduler:
         raise NotImplementedError
 
 
+@register_scheduler("sync")
 class SyncScheduler(Scheduler):
     """Wait for every satellite (FedAvg round over the full constellation)."""
     name = "sync"
@@ -33,6 +35,7 @@ class SyncScheduler(Scheduler):
         return n_in_buffer >= K
 
 
+@register_scheduler("async")
 class AsyncScheduler(Scheduler):
     """Aggregate whenever anything is in the buffer."""
     name = "async"
@@ -41,6 +44,7 @@ class AsyncScheduler(Scheduler):
         return n_in_buffer > 0
 
 
+@register_scheduler("fedbuff")
 class FedBuffScheduler(Scheduler):
     """Aggregate once the buffer reaches M (Nguyen et al. 2021)."""
     name = "fedbuff"
@@ -52,6 +56,7 @@ class FedBuffScheduler(Scheduler):
         return n_in_buffer >= self.M
 
 
+@register_scheduler("periodic")
 class PeriodicScheduler(Scheduler):
     """Beyond-paper baseline: aggregate every P windows regardless of buffer
     content (a 'cron' server)."""
@@ -64,6 +69,7 @@ class PeriodicScheduler(Scheduler):
         return n_in_buffer > 0 and (i + 1) % self.period == 0
 
 
+@register_scheduler("fedspace")
 class FedSpaceScheduler(Scheduler):
     """The paper's scheduler: every I0 windows, random-search a schedule for
     the next I0 windows against the utility regressor û, using the known
@@ -114,14 +120,6 @@ class FedSpaceScheduler(Scheduler):
 
 
 def make_scheduler(name: str, **kw) -> Scheduler:
-    if name == "sync":
-        return SyncScheduler()
-    if name == "async":
-        return AsyncScheduler()
-    if name == "fedbuff":
-        return FedBuffScheduler(M=kw.get("M", 96))
-    if name == "periodic":
-        return PeriodicScheduler(period=kw.get("period", 4))
-    if name == "fedspace":
-        return FedSpaceScheduler(kw.pop("regressor"), **kw)
-    raise KeyError(name)
+    """Build a registered scheduler by name. Unknown names raise a KeyError
+    listing what is registered (see repro.fl.registry)."""
+    return SCHEDULERS.build(name, **kw)

@@ -36,8 +36,10 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
     """Predicted summed utility per candidate (eq. 13)."""
     cands = jnp.asarray(candidates)
     Cw = jnp.asarray(C_window)
-    _, _, infos = SS.simulate_candidates(Cw, cands, state,
-                                         jnp.int32(ig))
+    # s_max must reach the simulator so the staleness histograms match
+    # the regressor's feature width
+    _, _, infos = SS.simulate_candidates(Cw, cands, state, jnp.int32(ig),
+                                         s_max=s_max)
     hist = np.asarray(infos["hist"])                     # (R, I0, s_max+1)
     Rn, I0, F = hist.shape
     feats = featurize(hist.reshape(Rn * I0, F), status)

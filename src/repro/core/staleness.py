@@ -119,9 +119,11 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8):
 
 
 # vmap over candidate schedules: a (R, I0) -> infos stacked over R.
-simulate_candidates = jax.vmap(simulate_window,
-                               in_axes=(None, 0, None, None),
-                               out_axes=0)
+def simulate_candidates(C_window, candidates, state: SatState, ig, *,
+                        s_max: int = 8):
+    """`simulate_window` vmapped over candidate schedules (axis 0)."""
+    return jax.vmap(lambda a: simulate_window(C_window, a, state, ig,
+                                              s_max=s_max))(candidates)
 
 
 # ---------------------------------------------------------------------------

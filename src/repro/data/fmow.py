@@ -13,6 +13,7 @@ low-dim feature vector for fast FL sweeps.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -59,7 +60,10 @@ class SyntheticFmow:
         self._zone_p /= self._zone_p.sum(1, keepdims=True)
 
         def draw(n, tag):
-            r = np.random.default_rng(spec.seed + hash(tag) % 2 ** 16)
+            # crc32, not hash(): str hashing is randomized per process,
+            # which made the drawn dataset itself non-reproducible
+            r = np.random.default_rng(
+                spec.seed + zlib.crc32(tag.encode()) % 2 ** 16)
             zones = r.integers(0, NUM_UTM_ZONES, n)
             labels = np.array([r.choice(NUM_CLASSES, p=self._zone_p[z])
                                for z in zones], np.int64)

@@ -1,3 +1,60 @@
-from repro.fl.adapters import DenseNetFmowAdapter, MlpFmowAdapter
-from repro.fl.client import make_client_update
-from repro.fl.simulation import SimResult, run_simulation
+"""Public surface of `repro.fl`.
+
+Attribute access is lazy (PEP 562): importing `repro.fl.registry` from the
+lower `repro.core` layer must not drag in the jax-heavy adapter/engine
+modules (which themselves import `repro.core`) — the registries are the
+one piece both layers share.
+"""
+from __future__ import annotations
+
+import importlib
+
+_LAZY = {
+    # adapters / client
+    "DenseNetFmowAdapter": "repro.fl.adapters",
+    "MlpFmowAdapter": "repro.fl.adapters",
+    "make_client_update": "repro.fl.client",
+    # engine + shim
+    "EngineConfig": "repro.fl.engine",
+    "SimResult": "repro.fl.engine",
+    "SimulationEngine": "repro.fl.engine",
+    "T0_MINUTES": "repro.fl.engine",
+    "run_simulation": "repro.fl.simulation",
+    # declarative experiment layer
+    "AdapterConfig": "repro.fl.api",
+    "ConstellationConfig": "repro.fl.api",
+    "DatasetConfig": "repro.fl.api",
+    "FLExperiment": "repro.fl.api",
+    "Federation": "repro.fl.api",
+    "LinkConfig": "repro.fl.api",
+    "PartitionConfig": "repro.fl.api",
+    "SchedulerConfig": "repro.fl.api",
+    # callbacks
+    "Callback": "repro.fl.callbacks",
+    "CheckpointCallback": "repro.fl.callbacks",
+    "EarlyStopCallback": "repro.fl.callbacks",
+    "JsonlMetricsCallback": "repro.fl.callbacks",
+    "ProgressCallback": "repro.fl.callbacks",
+    # registries
+    "ADAPTERS": "repro.fl.registry",
+    "PARTITIONS": "repro.fl.registry",
+    "SCHEDULERS": "repro.fl.registry",
+    "register_adapter": "repro.fl.registry",
+    "register_partition": "repro.fl.registry",
+    "register_scheduler": "repro.fl.registry",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        module = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.fl' has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.data.fmow import NUM_CLASSES, SyntheticFmow
 from repro.data.pipeline import ClientDataset
+from repro.fl.registry import register_adapter
 from repro.models import densenet as DN
 
 
@@ -23,6 +24,7 @@ def _xent(logits, labels):
     return jnp.mean(lse - ll)
 
 
+@register_adapter("mlp")
 class MlpFmowAdapter:
     """Fast path: 62-class classification over feature vectors."""
 
@@ -80,6 +82,7 @@ class MlpFmowAdapter:
         return float(self.loss(params, (X, y)))
 
 
+@register_adapter("densenet")
 class DenseNetFmowAdapter(MlpFmowAdapter):
     """The paper's model family: DenseNet-style CNN over images, optional
     frozen prefix (transfer learning, §4.1)."""

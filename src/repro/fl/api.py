@@ -1,0 +1,245 @@
+"""Declarative experiment layer: `FLExperiment` (what to run, as data) and
+`Federation` (the wired-up world that runs it).
+
+One experiment = constellation x dataset x partition x adapter x scheduler
+x training/link options. Every component is referenced by registry name
+(`repro.fl.registry`), so a new scheduler/adapter/partitioner registered
+via decorator is immediately selectable here — no engine edits, no new
+kwargs on a god-function:
+
+    exp = FLExperiment(
+        constellation=ConstellationConfig(num_satellites=40, days=3.0),
+        dataset=DatasetConfig(num_train=4000, num_val=1000, noise=2.2),
+        partition=PartitionConfig(kind="noniid"),
+        adapter=AdapterConfig(kind="mlp", params={"hidden": 48}),
+        scheduler=SchedulerConfig(kind="fedbuff", params={"M": 20}),
+        train=EngineConfig(local_steps=16, client_lr=1.0, target_acc=0.35),
+    )
+    result = Federation.from_experiment(exp).run()
+
+`Federation` owns all the wiring that used to be copy-pasted across
+examples/, benchmarks/, and launch/: spec -> connectivity -> data ->
+partition -> clients -> adapter -> scheduler (including FedSpace's
+phase-1 trajectory/regressor when the scheduler needs it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import connectivity as CN
+from repro.data.fmow import FmowSpec, SyntheticFmow
+from repro.data.partition import iid_partition, noniid_partition
+from repro.data.pipeline import make_clients
+import repro.fl.adapters  # noqa: F401 — registers the built-in adapters
+from repro.fl.engine import EngineConfig, SimResult, SimulationEngine
+from repro.fl.registry import (ADAPTERS, PARTITIONS, SCHEDULERS,
+                               register_partition)
+
+__all__ = ["ConstellationConfig", "DatasetConfig", "PartitionConfig",
+           "AdapterConfig", "SchedulerConfig", "LinkConfig",
+           "FLExperiment", "Federation"]
+
+
+# --------------------------------------------------------------------------
+# sub-configs
+
+
+@dataclass
+class ConstellationConfig:
+    """Constellation + simulated horizon for the connectivity sequence."""
+    num_satellites: int = 40
+    days: float = 3.0
+    spec_overrides: Dict = field(default_factory=dict)  # ConstellationSpec
+
+    def build(self):
+        spec = CN.ConstellationSpec(num_satellites=self.num_satellites,
+                                    **self.spec_overrides)
+        return spec, CN.connectivity_sets(spec, days=self.days)
+
+
+@dataclass
+class DatasetConfig:
+    """Synthetic-fMoW knobs (see repro.data.fmow.FmowSpec)."""
+    num_train: int = 4000
+    num_val: int = 1000
+    noise: float = 0.9
+    image_size: int = 16
+    feature_dim: int = 32
+    seed: int = 1234
+
+    def to_spec(self) -> FmowSpec:
+        return FmowSpec(num_train=self.num_train, num_val=self.num_val,
+                        noise=self.noise, image_size=self.image_size,
+                        feature_dim=self.feature_dim, seed=self.seed)
+
+
+@dataclass
+class PartitionConfig:
+    kind: str = "iid"                      # registry key
+    params: Dict = field(default_factory=dict)
+    seed: Optional[int] = None             # None -> experiment seed
+
+
+@dataclass
+class AdapterConfig:
+    kind: str = "mlp"                      # registry key
+    params: Dict = field(default_factory=dict)
+
+
+@dataclass
+class SchedulerConfig:
+    kind: str = "fedbuff"                  # registry key
+    params: Dict = field(default_factory=dict)
+    # FedSpace phase-1 knobs (pretrain_rounds, utility_samples,
+    # local_steps, client_lr, ...) consumed by build_fedspace_scheduler
+    # when kind == "fedspace" and no regressor is supplied in params.
+    setup: Dict = field(default_factory=dict)
+
+
+@dataclass
+class LinkConfig:
+    """Satellite-to-GS link model options (compression today; bandwidth /
+    loss models are future scenario PRs)."""
+    uplink_topk: float = 0.0      # >0: top-k+int8 compressed uplink
+
+
+# --------------------------------------------------------------------------
+# the experiment spec
+
+
+@dataclass
+class FLExperiment:
+    name: str = ""
+    constellation: ConstellationConfig = field(
+        default_factory=ConstellationConfig)
+    dataset: DatasetConfig = field(default_factory=DatasetConfig)
+    partition: PartitionConfig = field(default_factory=PartitionConfig)
+    adapter: AdapterConfig = field(default_factory=AdapterConfig)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    train: EngineConfig = field(default_factory=EngineConfig)
+    link: LinkConfig = field(default_factory=LinkConfig)
+    seed: int = 0
+
+    def describe(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# built-in partitioners (registry signature: f(data, K, spec, *, days,
+# seed, **params))
+
+
+@register_partition("iid")
+def _iid_partition(data, K, spec, *, days, seed, **params):
+    return iid_partition(data.spec.num_train, K, seed)
+
+
+@register_partition("noniid")
+def _noniid_partition(data, K, spec, *, days, seed, **params):
+    return noniid_partition(data.train_zones, K, spec, days=days,
+                            seed=seed, **params)
+
+
+# --------------------------------------------------------------------------
+# the builder
+
+
+class Federation:
+    """A fully wired world: constellation, connectivity, data, adapter,
+    scheduler — ready to produce `SimulationEngine`s."""
+
+    def __init__(self, *, experiment: FLExperiment, spec, C: np.ndarray,
+                 data, adapter, scheduler=None,
+                 scheduler_diag: Optional[dict] = None,
+                 _regressor_cache: Optional[Dict] = None):
+        self.experiment = experiment
+        self.spec = spec
+        self.C = C
+        self.data = data
+        self.adapter = adapter
+        self.scheduler = scheduler
+        self.scheduler_diag = scheduler_diag or {}
+        # FedSpace phase-1 (regressor, diag) keyed by setup knobs, shared
+        # across with_scheduler clones of this world
+        self._regressor_cache: Dict = ({} if _regressor_cache is None
+                                       else _regressor_cache)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_experiment(cls, exp: FLExperiment) -> "Federation":
+        spec, C = exp.constellation.build()
+        data = SyntheticFmow(exp.dataset.to_spec())
+        pseed = exp.partition.seed if exp.partition.seed is not None \
+            else exp.seed
+        parts = PARTITIONS.build(exp.partition.kind, data,
+                                 spec.num_satellites, spec,
+                                 days=exp.constellation.days, seed=pseed,
+                                 **exp.partition.params)
+        adapter = ADAPTERS.build(exp.adapter.kind, data,
+                                 make_clients(parts), **exp.adapter.params)
+        fed = cls(experiment=exp, spec=spec, C=C, data=data,
+                  adapter=adapter)
+        fed.scheduler, diag = fed._build_scheduler(exp)
+        fed.scheduler_diag = diag
+        return fed
+
+    def _build_scheduler(self, exp: FLExperiment):
+        cfg = exp.scheduler
+        if cfg.kind == "fedspace" and "regressor" not in cfg.params:
+            # phase 1 (paper §3.2) needs the adapter: pretrain the source
+            # trajectory and fit û before the scheduler exists. Cached per
+            # setup so comparing schedule configs reuses one regressor.
+            from repro.fl.fedspace_setup import build_utility_regressor
+            # s_max must agree between regressor training and schedule
+            # search — resolve once, apply to both phases
+            s_max = cfg.params.get("s_max", cfg.setup.get("s_max", 8))
+            setup = {"seed": exp.seed, **cfg.setup, "s_max": s_max}
+            key = repr(sorted(setup.items()))
+            if key not in self._regressor_cache:
+                self._regressor_cache[key] = build_utility_regressor(
+                    self.adapter, **setup)
+            reg, diag = self._regressor_cache[key]
+            params = {"seed": exp.seed, **cfg.params, "s_max": s_max,
+                      "regressor": reg}
+            return SCHEDULERS.build("fedspace", **params), diag
+        return SCHEDULERS.build(cfg.kind, **cfg.params), {}
+
+    def with_scheduler(self, scheduler: Union[str, SchedulerConfig],
+                       **params) -> "Federation":
+        """Same world, different aggregation policy — for scheduler
+        comparisons without rebuilding constellation/data (or, for
+        FedSpace variants with identical `setup`, the utility regressor)."""
+        cfg = (SchedulerConfig(kind=scheduler, params=params)
+               if isinstance(scheduler, str) else scheduler)
+        exp = dataclasses.replace(self.experiment, scheduler=cfg)
+        fed = Federation(experiment=exp, spec=self.spec, C=self.C,
+                         data=self.data, adapter=self.adapter,
+                         _regressor_cache=self._regressor_cache)
+        fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
+        return fed
+
+    # -- running ------------------------------------------------------------
+
+    def engine(self, *, callbacks: Sequence = (),
+               init_params=None) -> SimulationEngine:
+        # explicitly-set train fields win; unset (None) ones fall back to
+        # the experiment-wide seed / LinkConfig compression settings
+        exp = self.experiment
+        cfg = exp.train
+        seed = cfg.seed if cfg.seed is not None else exp.seed
+        topk = cfg.uplink_topk if cfg.uplink_topk is not None \
+            else exp.link.uplink_topk
+        cfg = dataclasses.replace(cfg, seed=seed, uplink_topk=topk)
+        return SimulationEngine(self.C, self.adapter, self.scheduler, cfg,
+                                callbacks=callbacks,
+                                init_params=init_params)
+
+    def run(self, *, callbacks: Sequence = (),
+            init_params=None) -> SimResult:
+        return self.engine(callbacks=callbacks,
+                           init_params=init_params).run()

@@ -1,0 +1,278 @@
+"""Event-driven FL simulation engine over the connectivity sequence
+(Algorithm 1), decomposed into overridable protocol steps.
+
+Time advances in T0 windows (15 min each). At window i the GS:
+  receives pending updates from connected satellites (`on_uploads`), asks
+  the scheduler whether to aggregate a^i (`on_decide`), applies the
+  staleness-compensated update of eq. 4 when a^i = 1 (`on_aggregate`), and
+  broadcasts the current model (`on_downloads`).
+
+The engine mirrors exactly the protocol the schedule-search simulator
+(repro.core.staleness) assumes, with real gradients; the per-satellite
+integer state is the same SatState, so FedSpaceScheduler reads it directly.
+
+Subclass and override a step to model protocol variants (ISL propagation,
+sink satellites, lossy links); attach `repro.fl.callbacks.Callback`s for
+cross-cutting concerns (metric streaming, checkpointing, early stop).
+`repro.fl.simulation.run_simulation` is a thin back-compat wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointStore
+from repro.core import staleness as SS
+from repro.core.aggregation import apply_aggregation
+from repro.core.scheduler import Scheduler
+from repro.fl.client import make_client_update
+from repro.fl.compression import roundtrip
+
+T0_MINUTES = 15.0
+
+
+@dataclass
+class SimResult:
+    scheme: str
+    accuracy: List[float] = field(default_factory=list)
+    val_loss: List[float] = field(default_factory=list)
+    eval_windows: List[int] = field(default_factory=list)
+    staleness_hist: np.ndarray = None
+    idle_connections: int = 0
+    total_connections: int = 0
+    num_global_updates: int = 0
+    num_aggregated_gradients: int = 0
+    windows_run: int = 0
+    time_to_target_days: Optional[float] = None
+    target_acc: Optional[float] = None
+
+    def days(self, window: int) -> float:
+        return window * T0_MINUTES / 60.0 / 24.0
+
+    def summary(self) -> dict:
+        return {
+            "scheme": self.scheme,
+            "final_acc": self.accuracy[-1] if self.accuracy else None,
+            "best_acc": max(self.accuracy) if self.accuracy else None,
+            "time_to_target_days": self.time_to_target_days,
+            "global_updates": self.num_global_updates,
+            "aggregated_gradients": self.num_aggregated_gradients,
+            "idle_connections": self.idle_connections,
+            "total_connections": self.total_connections,
+            "staleness_hist": (self.staleness_hist.tolist()
+                               if self.staleness_hist is not None else None),
+        }
+
+
+@dataclass
+class EngineConfig:
+    """Protocol/training knobs of one simulated run (the former
+    `run_simulation` keyword soup, as data)."""
+    local_steps: int = 4
+    batch_size: int = 32
+    client_lr: float = 0.05
+    server_lr: float = 1.0
+    alpha: float = 0.5
+    eval_every: int = 8
+    target_acc: Optional[float] = None
+    max_windows: Optional[int] = None
+    repeat_connectivity: int = 1   # 0: auto-tile C to cover max_windows
+    s_max: int = 8
+    # None = unset: lets experiment-level settings (FLExperiment.seed,
+    # LinkConfig.uplink_topk) apply without 0 doubling as a sentinel
+    seed: Optional[int] = None           # unset -> 0
+    stop_at_target: bool = True
+    uplink_topk: Optional[float] = None  # >0: compressed uplink; unset -> 0
+
+
+class SimulationEngine:
+    """One federated run: connectivity x adapter x scheduler -> SimResult.
+
+    Protocol steps (`on_uploads`, `on_decide`, `on_aggregate`,
+    `on_downloads`) are methods so scenario variants override exactly the
+    step they change; callbacks observe the run without touching it.
+    """
+
+    def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
+                 config: Optional[EngineConfig] = None, *,
+                 callbacks: Sequence = (), init_params=None, **overrides):
+        cfg = config if config is not None else EngineConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        cfg = dataclasses.replace(
+            cfg, seed=0 if cfg.seed is None else cfg.seed,
+            uplink_topk=(0.0 if cfg.uplink_topk is None
+                         else cfg.uplink_topk))
+        self.config = cfg
+        repeat = cfg.repeat_connectivity
+        if repeat == 0:    # auto: tile C up to the requested horizon
+            need = cfg.max_windows or C.shape[0]
+            repeat = max(1, -(-int(need) // C.shape[0]))
+        if repeat > 1:
+            C = np.concatenate([C] * repeat, axis=0)
+        self.C = np.asarray(C, bool)
+        self.adapter = adapter
+        self.scheduler = scheduler
+        self.callbacks = list(callbacks)
+        self._init_params = init_params
+        self._stop_requested = False
+
+        self.num_windows = self.C.shape[0]
+        if cfg.max_windows:
+            self.num_windows = min(self.num_windows, cfg.max_windows)
+        self.K = self.C.shape[1]
+
+    # ------------------------------------------------------------------ API
+
+    def request_stop(self) -> None:
+        """Ask the engine to stop after the current window (callbacks use
+        this for early stopping)."""
+        self._stop_requested = True
+
+    def run(self) -> SimResult:
+        cfg = self.config
+        self.scheduler.reset()
+        self._stop_requested = False
+
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = (self.adapter.init(key) if self._init_params is None
+                       else self._init_params)
+        mask = self.adapter.trainable_mask(self.params) \
+            if hasattr(self.adapter, "trainable_mask") else None
+        self._client_update = make_client_update(
+            self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
+            trainable_mask=mask)
+
+        self.store = CheckpointStore(keep_in_memory=cfg.s_max + 26)
+        self.store.put(0, self.params)
+        self.ig = 0
+        self.version = np.zeros(self.K, np.int64)   # model each sat holds
+        self.pending = np.zeros(self.K, np.int64)   # base of pending update
+        self.buffered_base = np.full(self.K, -1, np.int64)
+
+        self.result = SimResult(scheme=self.scheduler.name,
+                                target_acc=cfg.target_acc)
+        self.result.staleness_hist = np.zeros(cfg.s_max + 1, np.int64)
+        self.status = float(self.adapter.val_loss(self.params))
+
+        try:
+            self._emit("on_run_begin")
+            for i in range(self.num_windows):
+                conn = self.C[i]
+                n_buf = self.on_uploads(i, conn)
+                a = self.on_decide(i, n_buf)
+                if a and n_buf > 0:
+                    self.on_aggregate(i)
+                self.on_downloads(i, conn)
+                self.result.windows_run = i + 1
+                stop = False
+                if (i + 1) % cfg.eval_every == 0 \
+                        or i == self.num_windows - 1:
+                    stop = self.evaluate(i)
+                self._emit("on_window_end", i)
+                if stop or self._stop_requested:
+                    break
+        finally:
+            # always emitted (even on a mid-run exception) so callbacks
+            # holding resources — open files, sockets — can release them
+            self._emit("on_run_end", self.result)
+        return self.result
+
+    # -------------------------------------------------------- protocol steps
+
+    def on_uploads(self, i: int, conn: np.ndarray) -> int:
+        """Connected satellites hand their pending update to the GS buffer.
+        Returns the buffer occupancy. Vectorized over the constellation."""
+        res = self.result
+        res.total_connections += int(conn.sum())
+        has_pending = conn & (self.pending >= 0)
+        # idle contact: nothing to upload and model already current
+        res.idle_connections += int(
+            (conn & ~has_pending & (self.version == self.ig)).sum())
+        self.buffered_base[has_pending] = self.pending[has_pending]
+        self.pending[has_pending] = -1
+        return int((self.buffered_base >= 0).sum())
+
+    def on_decide(self, i: int, n_buf: int) -> bool:
+        """Ask the scheduler for the aggregation indicator a^i."""
+        state = SS.SatState(jnp.asarray(self.version, jnp.int32),
+                            jnp.asarray(self.pending, jnp.int32),
+                            jnp.asarray(self.buffered_base, jnp.int32))
+        return self.scheduler.decide(
+            i, n_in_buffer=n_buf, K=self.K, state=state, ig=self.ig,
+            connectivity=self.C, status=self.status)
+
+    def on_aggregate(self, i: int) -> None:
+        """Apply the staleness-compensated buffered update (eq. 4)."""
+        cfg = self.config
+        ks = np.flatnonzero(self.buffered_base >= 0)
+        stal = self.ig - self.buffered_base[ks]
+        updates = []
+        for k in ks:
+            base = self.store.get(int(self.buffered_base[k]))
+            u = self._client_update(base, int(k), round_rng=i,
+                                    batch_size=cfg.batch_size)
+            if cfg.uplink_topk > 0.0:   # beyond-paper: compressed uplink
+                u, _ = roundtrip(u, cfg.uplink_topk)
+            updates.append(u)
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+        self.params = apply_aggregation(self.params, stack,
+                                        jnp.asarray(stal), alpha=cfg.alpha,
+                                        server_lr=cfg.server_lr)
+        self.ig += 1
+        self.store.put(self.ig, self.params)
+        refs = np.concatenate([self.pending, self.buffered_base])
+        refs = refs[refs >= 0]
+        self.store.prune(int(refs.min()) if refs.size else self.ig)
+        res = self.result
+        res.num_global_updates += 1
+        res.num_aggregated_gradients += len(ks)
+        np.add.at(res.staleness_hist, np.clip(stal, 0, cfg.s_max), 1)
+        self.buffered_base[:] = -1
+        self._emit("on_aggregate_end", i,
+                   {"ig": self.ig, "n_aggregated": len(ks),
+                    "staleness": stal.tolist()})
+
+    def on_downloads(self, i: int, conn: np.ndarray) -> None:
+        """Connected satellites fetch the current global model and start a
+        fresh local round on it. Vectorized over the constellation."""
+        behind = conn & (self.version < self.ig)
+        self.version[behind] = self.ig
+        self.pending[behind] = self.ig
+
+    # --------------------------------------------------------------- eval
+
+    def evaluate(self, i: int) -> bool:
+        """Eval checkpoint; returns True when the run should stop (target
+        accuracy reached and stop_at_target is set)."""
+        cfg, res = self.config, self.result
+        acc = self.adapter.accuracy(self.params)
+        self.status = float(self.adapter.val_loss(self.params))
+        res.accuracy.append(acc)
+        res.val_loss.append(self.status)
+        res.eval_windows.append(i)
+        self._emit("on_eval", i, {
+            "window": i, "day": res.days(i), "accuracy": acc,
+            "val_loss": self.status,
+            "global_updates": res.num_global_updates,
+            "aggregated_gradients": res.num_aggregated_gradients,
+        })
+        if (cfg.target_acc is not None and acc >= cfg.target_acc
+                and res.time_to_target_days is None):
+            res.time_to_target_days = res.days(i)
+            if cfg.stop_at_target:
+                return True
+        return False
+
+    # ------------------------------------------------------------ callbacks
+
+    def _emit(self, event: str, *args) -> None:
+        for cb in self.callbacks:
+            handler = getattr(cb, event, None)
+            if handler is not None:
+                handler(self, *args)

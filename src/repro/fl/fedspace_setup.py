@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scheduler import make_scheduler
 from repro.core.utility import (MLPRegressor, RandomForestRegressor,
                                 generate_utility_samples)
 from repro.fl.client import make_client_update
@@ -69,3 +70,37 @@ def fit_utility_regressor(adapter, trajectory, *, kind: str = "rf",
                                              1e-12)
     return reg, {"r2_in_sample": float(ss), "n": len(y),
                  "y_mean": float(y.mean()), "y_std": float(y.std())}
+
+
+def build_utility_regressor(adapter, *, regressor_kind="rf",
+                            pretrain_rounds=40, utility_samples=250,
+                            local_steps=16, client_lr=1.0,
+                            clients_per_round=24, clients_per_sample=48,
+                            s_max=8, seed=0):
+    """Phase 1 alone (the expensive part): pretrain the source trajectory
+    and fit û. Returns (regressor, diagnostics) so callers comparing
+    several FedSpace schedule configurations can reuse one regressor."""
+    traj = pretrain_trajectory(adapter, rounds=pretrain_rounds,
+                               clients_per_round=clients_per_round,
+                               local_steps=local_steps,
+                               client_lr=client_lr, seed=seed)
+    return fit_utility_regressor(adapter, traj, kind=regressor_kind,
+                                 n_samples=utility_samples, s_max=s_max,
+                                 clients_per_sample=clients_per_sample,
+                                 local_steps=local_steps,
+                                 client_lr=client_lr, seed=seed)
+
+
+def build_fedspace_scheduler(adapter, *, I0=24, n_min=None, n_max=None,
+                             num_candidates=5000, s_max=8, seed=0,
+                             **setup_kw):
+    """Full phase-1 wiring: pretrain the source trajectory, fit û, and
+    return the configured FedSpace scheduler plus the regressor diagnostics.
+    This is THE calibrated setup shared by examples/benchmarks/launchers;
+    extra keywords go to `build_utility_regressor`."""
+    reg, diag = build_utility_regressor(adapter, s_max=s_max, seed=seed,
+                                        **setup_kw)
+    sched = make_scheduler("fedspace", regressor=reg, I0=I0, n_min=n_min,
+                           n_max=n_max, num_candidates=num_candidates,
+                           s_max=s_max, seed=seed)
+    return sched, diag

@@ -1,64 +1,25 @@
-"""Event-driven FL simulation over the connectivity sequence (Algorithm 1).
+"""Back-compat entry point for the FL simulation.
 
-Time advances in T0 windows (15 min each). At window i the GS:
-  receives pending updates from connected satellites, asks the scheduler
-  whether to aggregate (a^i), applies the staleness-compensated update
-  (eq. 4) when a^i = 1, and broadcasts the current model.
+The protocol loop now lives in `repro.fl.engine.SimulationEngine`
+(overridable steps + callback hooks); `run_simulation` is a thin wrapper
+kept so pre-engine call sites and tests continue to work unchanged.
+Prefer the declarative layer for new code:
 
-The engine mirrors exactly the protocol the schedule-search simulator
-(repro.core.staleness) assumes, with real gradients; the per-satellite
-integer state is the same SatState, so FedSpaceScheduler reads it directly.
+    from repro.fl.api import FLExperiment, Federation
+    result = Federation.from_experiment(FLExperiment(...)).run()
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt.checkpoint import CheckpointStore
-from repro.core import staleness as SS
-from repro.core.aggregation import apply_aggregation
 from repro.core.scheduler import Scheduler
-from repro.fl.client import make_client_update
+from repro.fl.engine import (EngineConfig, SimResult, SimulationEngine,
+                             T0_MINUTES)
 
-T0_MINUTES = 15.0
-
-
-@dataclass
-class SimResult:
-    scheme: str
-    accuracy: List[float] = field(default_factory=list)
-    val_loss: List[float] = field(default_factory=list)
-    eval_windows: List[int] = field(default_factory=list)
-    staleness_hist: np.ndarray = None
-    idle_connections: int = 0
-    total_connections: int = 0
-    num_global_updates: int = 0
-    num_aggregated_gradients: int = 0
-    windows_run: int = 0
-    time_to_target_days: Optional[float] = None
-    target_acc: Optional[float] = None
-
-    def days(self, window: int) -> float:
-        return window * T0_MINUTES / 60.0 / 24.0
-
-    def summary(self) -> dict:
-        return {
-            "scheme": self.scheme,
-            "final_acc": self.accuracy[-1] if self.accuracy else None,
-            "best_acc": max(self.accuracy) if self.accuracy else None,
-            "time_to_target_days": self.time_to_target_days,
-            "global_updates": self.num_global_updates,
-            "aggregated_gradients": self.num_aggregated_gradients,
-            "idle_connections": self.idle_connections,
-            "total_connections": self.total_connections,
-            "staleness_hist": (self.staleness_hist.tolist()
-                               if self.staleness_hist is not None else None),
-        }
+__all__ = ["run_simulation", "SimResult", "SimulationEngine",
+           "EngineConfig", "T0_MINUTES"]
 
 
 def run_simulation(C: np.ndarray, adapter, scheduler: Scheduler, *,
@@ -73,94 +34,15 @@ def run_simulation(C: np.ndarray, adapter, scheduler: Scheduler, *,
                    uplink_topk: float = 0.0,
                    ) -> SimResult:
     """Run one scheme over the connectivity sequence C (I, K)."""
-    if repeat_connectivity > 1:
-        C = np.concatenate([C] * repeat_connectivity, axis=0)
-    I, K = C.shape
-    if max_windows:
-        I = min(I, max_windows)
-    scheduler.reset()
-
-    key = jax.random.PRNGKey(seed)
-    params = adapter.init(key) if init_params is None else init_params
-    mask = adapter.trainable_mask(params) \
-        if hasattr(adapter, "trainable_mask") else None
-    client_update = make_client_update(adapter, local_steps=local_steps,
-                                       lr=client_lr, trainable_mask=mask)
-
-    store = CheckpointStore(keep_in_memory=s_max + 26)
-    store.put(0, params)
-    ig = 0
-    state = SS.bootstrap_state(K)
-    version = np.zeros(K, np.int64)       # mirrors state.version
-    pending = np.zeros(K, np.int64)       # base version of pending update
-    buffered_base = np.full(K, -1, np.int64)
-
-    res = SimResult(scheme=scheduler.name, target_acc=target_acc)
-    res.staleness_hist = np.zeros(s_max + 1, np.int64)
-    status = float(adapter.val_loss(params))
-
-    for i in range(I):
-        conn = np.flatnonzero(C[i])
-        # 1. uploads
-        for k in conn:
-            res.total_connections += 1
-            if pending[k] >= 0:
-                buffered_base[k] = pending[k]
-                pending[k] = -1
-            elif version[k] == ig:
-                res.idle_connections += 1
-        n_buf = int((buffered_base >= 0).sum())
-
-        # 2. scheduler decision
-        state = SS.SatState(jnp.asarray(version, jnp.int32),
-                            jnp.asarray(pending, jnp.int32),
-                            jnp.asarray(buffered_base, jnp.int32))
-        a = scheduler.decide(i, n_in_buffer=n_buf, K=K, state=state, ig=ig,
-                             connectivity=C, status=status)
-
-        # 3. aggregate (eq. 4)
-        if a and n_buf > 0:
-            ks = np.flatnonzero(buffered_base >= 0)
-            stal = ig - buffered_base[ks]
-            updates = []
-            for k in ks:
-                base = store.get(int(buffered_base[k]))
-                u = client_update(base, int(k), round_rng=i)
-                if uplink_topk > 0.0:   # beyond-paper: compressed uplink
-                    from repro.fl.compression import roundtrip
-                    u, _ = roundtrip(u, uplink_topk)
-                updates.append(u)
-            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
-            params = apply_aggregation(params, stack,
-                                       jnp.asarray(stal), alpha=alpha,
-                                       server_lr=server_lr)
-            ig += 1
-            store.put(ig, params)
-            refs = [v for v in np.concatenate([pending, buffered_base])
-                    if v >= 0]
-            store.prune(min(refs) if refs else ig)
-            res.num_global_updates += 1
-            res.num_aggregated_gradients += len(ks)
-            cl = np.clip(stal, 0, s_max)
-            np.add.at(res.staleness_hist, cl, 1)
-            buffered_base[:] = -1
-
-        # 4. downloads
-        for k in conn:
-            if version[k] < ig:
-                version[k] = ig
-                pending[k] = ig
-
-        res.windows_run = i + 1
-        if (i + 1) % eval_every == 0 or i == I - 1:
-            acc = adapter.accuracy(params)
-            status = float(adapter.val_loss(params))
-            res.accuracy.append(acc)
-            res.val_loss.append(status)
-            res.eval_windows.append(i)
-            if (target_acc is not None and acc >= target_acc
-                    and res.time_to_target_days is None):
-                res.time_to_target_days = res.days(i)
-                if stop_at_target:
-                    break
-    return res
+    config = EngineConfig(
+        local_steps=local_steps, batch_size=batch_size,
+        client_lr=client_lr, server_lr=server_lr, alpha=alpha,
+        eval_every=eval_every, target_acc=target_acc,
+        max_windows=max_windows,
+        # legacy semantics: values <= 1 never tiled (0 is NOT the engine's
+        # auto-tile sentinel here)
+        repeat_connectivity=max(1, repeat_connectivity),
+        s_max=s_max, seed=seed, stop_at_target=stop_at_target,
+        uplink_topk=uplink_topk)
+    return SimulationEngine(C, adapter, scheduler, config,
+                            init_params=init_params).run()

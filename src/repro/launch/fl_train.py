@@ -1,34 +1,60 @@
-"""FL launcher: run the FedSpace protocol (or any baseline scheduler) over
-the satellite constellation — the paper's system as a deployable driver.
+"""FL launcher: run the FedSpace protocol (or any registered scheduler)
+over the satellite constellation — the paper's system as a deployable
+driver, built entirely through the declarative `repro.fl.api` layer.
 
     PYTHONPATH=src python -m repro.launch.fl_train --scheduler fedspace \
         --setting noniid --days 10 --target-acc 0.4
+
+Any scheduler registered via `@register_scheduler` is selectable by name;
+`--metrics-jsonl` streams eval metrics live to a JSONL file.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import numpy as np
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          FLExperiment, Federation, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.callbacks import JsonlMetricsCallback, ProgressCallback
+from repro.fl.engine import EngineConfig
+from repro.fl.registry import ADAPTERS, SCHEDULERS
 
-from repro.core import connectivity as CN
-from repro.core.scheduler import make_scheduler
-from repro.data.fmow import FmowSpec, SyntheticFmow
-from repro.data.partition import iid_partition, noniid_partition
-from repro.data.pipeline import make_clients
-from repro.fl.adapters import DenseNetFmowAdapter, MlpFmowAdapter
-from repro.fl.simulation import run_simulation
+
+def build_experiment(args) -> FLExperiment:
+    scheduler = SchedulerConfig(kind=args.scheduler)
+    if args.scheduler == "fedbuff":
+        scheduler.params["M"] = args.M
+    if args.scheduler == "fedspace":
+        scheduler.setup = {"local_steps": args.local_steps,
+                           "client_lr": args.client_lr}
+    return FLExperiment(
+        name=f"fl_train-{args.scheduler}-{args.setting}",
+        constellation=ConstellationConfig(
+            num_satellites=args.satellites, days=min(args.days, 5.0)),
+        dataset=DatasetConfig(num_train=args.num_train,
+                              num_val=args.num_train // 5, noise=2.2),
+        partition=PartitionConfig(kind=args.setting),
+        adapter=AdapterConfig(
+            kind=args.model,
+            params={"hidden": 48} if args.model == "mlp" else {}),
+        scheduler=scheduler,
+        train=EngineConfig(local_steps=args.local_steps,
+                           client_lr=args.client_lr, eval_every=24,
+                           target_acc=args.target_acc,
+                           max_windows=int(args.days * 96),
+                           repeat_connectivity=0),   # auto-tile C
+        seed=args.seed,
+    )
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheduler", default="fedspace",
-                    choices=["sync", "async", "fedbuff", "fedspace",
-                             "periodic"])
+                    choices=SCHEDULERS.names())
     ap.add_argument("--setting", default="noniid",
                     choices=["iid", "noniid"])
-    ap.add_argument("--model", default="mlp",
-                    choices=["mlp", "densenet"])
+    ap.add_argument("--model", default="mlp", choices=ADAPTERS.names())
     ap.add_argument("--satellites", type=int, default=191)
     ap.add_argument("--days", type=float, default=10.0)
     ap.add_argument("--target-acc", type=float, default=0.40)
@@ -37,36 +63,20 @@ def main():
     ap.add_argument("--num-train", type=int, default=9600)
     ap.add_argument("--M", type=int, default=96, help="FedBuff buffer")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="stream eval metrics to this JSONL file")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    spec = CN.ConstellationSpec(num_satellites=args.satellites)
-    C = CN.connectivity_sets(spec, days=min(args.days, 5.0))
-    data = SyntheticFmow(FmowSpec(num_train=args.num_train,
-                                  num_val=args.num_train // 5, noise=2.2))
-    parts = (iid_partition(args.num_train, args.satellites, args.seed)
-             if args.setting == "iid" else
-             noniid_partition(data.train_zones, args.satellites, spec,
-                              days=5.0, seed=args.seed))
-    cls = MlpFmowAdapter if args.model == "mlp" else DenseNetFmowAdapter
-    kw = {"hidden": 48} if args.model == "mlp" else {}
-    adapter = cls(data, make_clients(parts), **kw)
+    fed = Federation.from_experiment(build_experiment(args))
+    if fed.scheduler_diag:
+        print(f"utility regressor: {fed.scheduler_diag}")
 
-    if args.scheduler == "fedspace":
-        from benchmarks.common import build_fedspace_scheduler  # noqa: E501 — reuse calibrated setup
-        sched, diag = build_fedspace_scheduler(
-            adapter, local_steps=args.local_steps,
-            client_lr=args.client_lr, seed=args.seed)
-        print(f"utility regressor: {diag}")
-    else:
-        sched = make_scheduler(args.scheduler, M=args.M)
+    callbacks = [ProgressCallback()]
+    if args.metrics_jsonl:
+        callbacks.append(JsonlMetricsCallback(args.metrics_jsonl))
+    res = fed.run(callbacks=callbacks)
 
-    repeat = max(1, int(np.ceil(args.days * 96 / C.shape[0])))
-    res = run_simulation(C, adapter, sched, client_lr=args.client_lr,
-                         local_steps=args.local_steps, eval_every=24,
-                         target_acc=args.target_acc,
-                         max_windows=int(args.days * 96),
-                         repeat_connectivity=repeat, seed=args.seed)
     summary = res.summary()
     print(json.dumps(summary, indent=1))
     if args.out:

@@ -1,0 +1,85 @@
+"""Minimal deterministic stand-in for `hypothesis`, used only when the real
+package is not installed (tests/conftest.py injects this module as
+``sys.modules["hypothesis"]``).
+
+It implements just the surface our property tests use — `given`,
+`settings`, and the `integers` / `floats` / `booleans` / `lists` /
+`composite` strategies — driving each test with a fixed-seed RNG instead
+of shrinking search. Coverage is weaker than real hypothesis, but the
+invariant checks still run everywhere (e.g. a fresh container without
+optional dev deps).
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                  max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def _sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(_sample)
+
+
+def composite(fn):
+    """`@st.composite def s(draw, ...): ...` -> calling s() returns a
+    strategy that runs fn with a draw bound to the run's RNG."""
+    def make(*args, **kwargs):
+        def _sample(rng):
+            return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+        return _Strategy(_sample)
+    return make
+
+
+def given(*strategies):
+    def deco(fn):
+        # zero-arg wrapper (not functools.wraps): pytest must not mistake
+        # the wrapped function's drawn parameters for fixtures
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for _ in range(wrapper._max_examples):
+                fn(*[s.sample(rng) for s in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans, lists=lists,
+    composite=composite)
