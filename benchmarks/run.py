@@ -66,6 +66,18 @@ def main() -> None:
     for name, us, derived in krows():
         print(f"{name},{us:.0f},{derived}")
 
+    # ------------------------------------------------ hot paths
+    section("Simulation hot paths (smoke shapes; committed full-shape "
+            "baseline in BENCH_hotpaths.json)")
+    from benchmarks.hotpaths import bench_aggregation, bench_search
+    s = bench_search(smoke=True)
+    print(f"hotpath_search_replan,{s['t_optimized_warm_s'] * 1e6:.0f},"
+          f"speedup={s['speedup_warm']:.1f}x"
+          f"_identical={s['schedule_identical']}")
+    a = bench_aggregation(smoke=True)
+    print(f"hotpath_aggregation,{a['t_batched_s'] * 1e6:.0f},"
+          f"speedup={a['speedup']:.1f}x_bit={a['params_bit_equal']}")
+
     # ------------------------------------------------ roofline
     section("Roofline (from the recorded dry-run sweep)")
     path = os.path.join(os.path.dirname(__file__), "..", "results",

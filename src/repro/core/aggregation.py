@@ -2,10 +2,10 @@
 
     w^{i+1} = w^i + sum_k  c(s_k)/C * g_k,    C = sum_k c(s_k)
 
-Operates on pytrees of flat per-satellite update stacks. The hot spot — the
-weighted reduction over the update buffer at full model size — is a Pallas
-TPU kernel (repro.kernels.agg); this module falls back to the pure-jnp
-reference away from TPU.
+Operates on pytrees of per-satellite update stacks. The hot spot — the
+weighted reduction over the update buffer at full model size — routes
+through `repro.kernels.agg.ops.aggregate_params_tree`: the Pallas TPU
+kernel on TPU, the bit-identical pure-jnp reduction elsewhere.
 """
 from __future__ import annotations
 
@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.staleness import staleness_compensation
+from repro.kernels.agg.ops import aggregate_params_tree
 
 
 def aggregation_weights(staleness, alpha: float = 0.5):
@@ -23,22 +24,13 @@ def aggregation_weights(staleness, alpha: float = 0.5):
 
 def apply_aggregation(global_params, update_stack, staleness, *,
                       alpha: float = 0.5, server_lr: float = 1.0,
-                      use_kernel: bool = False):
+                      interpret=None):
     """global_params: pytree; update_stack: pytree with leading buffer dim M
     (stacked g_k); staleness: (M,) int32.
 
-    Returns updated params.
+    Returns updated params. `interpret` forwards to the kernel dispatch
+    (None = kernel on TPU, jnp reduction elsewhere).
     """
     w = aggregation_weights(staleness, alpha) * server_lr
-
-    if use_kernel:
-        from repro.kernels.agg.ops import weighted_aggregate_tree
-        delta = weighted_aggregate_tree(update_stack, w)
-    else:
-        delta = jax.tree.map(
-            lambda u: jnp.tensordot(w.astype(jnp.float32),
-                                    u.astype(jnp.float32), axes=1),
-            update_stack)
-    return jax.tree.map(
-        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
-        global_params, delta)
+    return aggregate_params_tree(global_params, update_stack, w,
+                                 interpret=interpret)

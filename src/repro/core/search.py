@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import staleness as SS
-from repro.core.utility import featurize
+from repro.core.utility import featurize, featurize_jnp
 
 
 def random_candidates(rng: np.random.Generator, I0: int, n_min: int,
@@ -33,13 +33,27 @@ def random_candidates(rng: np.random.Generator, I0: int, n_min: int,
 def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
                      state: SS.SatState, ig: int, regressor, status: float,
                      *, s_max: int = 8) -> np.ndarray:
-    """Predicted summed utility per candidate (eq. 13)."""
+    """Predicted summed utility per candidate (eq. 13).
+
+    When the regressor exposes `predict_device` (both built-in regressors
+    do), the whole pipeline — protocol simulation, featurization, regression,
+    masked reduction — stays on device; the only host transfer is the final
+    (R,) score vector. Regressors with only `.predict` (e.g. test oracles)
+    fall back to the host path.
+    """
     cands = jnp.asarray(candidates)
     Cw = jnp.asarray(C_window)
     # s_max must reach the simulator so the staleness histograms match
-    # the regressor's feature width
+    # the regressor's feature width; only the histograms are consumed
     _, _, infos = SS.simulate_candidates(Cw, cands, state, jnp.int32(ig),
-                                         s_max=s_max)
+                                         s_max=s_max, lite=True)
+    predict_device = getattr(regressor, "predict_device", None)
+    if predict_device is not None:
+        hist = infos["hist"]                             # (R, I0, s_max+1)
+        Rn, I0, F = hist.shape
+        feats = featurize_jnp(hist.reshape(Rn * I0, F), status)
+        util = predict_device(feats).reshape(Rn, I0)
+        return np.asarray((util * cands.astype(jnp.float32)).sum(axis=1))
     hist = np.asarray(infos["hist"])                     # (R, I0, s_max+1)
     Rn, I0, F = hist.shape
     feats = featurize(hist.reshape(Rn * I0, F), status)
@@ -55,22 +69,23 @@ def infer_n_range(regressor, uploads_per_window: float, I0: int,
     aggregation count n, approximate the per-aggregation staleness histogram
     under even spacing (uploads split across n aggregations, mostly fresh),
     and pick the count maximizing n * û(hist(n), T)."""
-    best_n, best_u = 1, -np.inf
     # Cap at one aggregation per two windows: beyond that per-aggregation
     # buffers thin out into the async regime the paper shows fails, and û
     # extrapolates badly at counts it never sampled.
     n_cap = max(1, I0 // 2)
     total_uploads = uploads_per_window * I0
-    for n in range(1, n_cap + 1):
-        per = total_uploads / n
-        if K:
-            per = min(per, K)
-        hist = np.zeros(s_max + 1, np.float32)
-        hist[0] = per * 0.7          # even spacing: gradients mostly fresh
-        hist[1] = per * 0.3
-        u = n * float(regressor.predict(featurize(hist[None], status))[0])
-        if u > best_u:
-            best_n, best_u = n, u
+    # f64 like the scalar loop this replaces (the f32 store happens once,
+    # on assignment into hists), so the histogram features — and thus the
+    # forest-split decisions — are bit-identical to the seed path
+    ns = np.arange(1, n_cap + 1, dtype=np.float64)
+    per = total_uploads / ns
+    if K:
+        per = np.minimum(per, K)
+    hists = np.zeros((n_cap, s_max + 1), np.float32)
+    hists[:, 0] = per * 0.7          # even spacing: gradients mostly fresh
+    hists[:, 1] = per * 0.3
+    u = ns * regressor.predict(featurize(hists, status)).astype(np.float64)
+    best_n = 1 + int(np.argmax(u))
     return max(1, best_n - halfwidth), min(n_cap, best_n + halfwidth)
 
 
@@ -82,4 +97,19 @@ def fedspace_search(rng: np.random.Generator, C_window: np.ndarray,
     cands = random_candidates(rng, I0, n_min, n_max, num_candidates)
     scores = score_candidates(cands, C_window, state, ig, regressor, status,
                               s_max=s_max)
-    return cands[int(np.argmax(scores))]
+    return cands[select_candidate(cands, scores)]
+
+
+def select_candidate(cands: np.ndarray, scores: np.ndarray) -> int:
+    """Index of the winning candidate. Distinct-but-equivalent candidates
+    (identical staleness histograms) tie at float level, and different
+    scoring backends (host numpy vs on-device) break such ties differently
+    by reduction-order jitter; so among candidates within float noise of
+    the max, pick the lexicographically smallest schedule — deterministic
+    and backend-stable."""
+    best = float(np.max(scores))
+    eps = 32 * float(np.finfo(np.float32).eps) * max(1.0, abs(best))
+    near = np.flatnonzero(scores >= best - eps)
+    if near.size > 1:
+        near = sorted(near, key=lambda j: cands[j].tobytes())
+    return int(near[0])

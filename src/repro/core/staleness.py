@@ -79,10 +79,14 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int):
     aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
     stale = jnp.where(in_buffer, ig - buffered, 0)
     stale_c = jnp.clip(stale, 0, s_max)
-    hist = jnp.zeros((s_max + 1,), jnp.int32).at[stale_c].add(
-        (in_buffer & aggregate).astype(jnp.int32))
-    n_agg = jnp.sum((in_buffer & aggregate).astype(jnp.int32))
-    max_stale = jnp.max(jnp.where(in_buffer & aggregate, stale, 0))
+    counted = in_buffer & aggregate
+    # histogram as compare+reduce rather than scatter-add: identical
+    # integer counts, but ~4x faster on CPU inside the vmapped search scan
+    # (XLA lowers the (R, K)->(R, s_max+1) scatter poorly there)
+    hist = jnp.sum((stale_c[..., None] == jnp.arange(s_max + 1))
+                   & counted[..., None], axis=-2, dtype=jnp.int32)
+    n_agg = jnp.sum(counted.astype(jnp.int32))
+    max_stale = jnp.max(jnp.where(counted, stale, 0))
     new_ig = ig + aggregate.astype(jnp.int32)
     buffered = jnp.where(aggregate, -1, buffered)
 
@@ -96,22 +100,27 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int):
     return SatState(version, pending, buffered), new_ig, info
 
 
-def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8):
+def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
+                    lite: bool = False):
     """Roll the protocol over a scheduling window.
 
     Args:
       C_window: (I0, K) bool future connectivity (deterministic!)
       a: (I0,) {0,1} candidate aggregation schedule
       state, ig: protocol state at window start
+      lite: emit only the staleness histograms — the scalar diagnostics
+        (n_idle, n_aggregated, max_staleness) become dead outputs and XLA
+        eliminates their per-step reductions, which is measurably faster
+        inside the vmapped search at R = thousands of candidates
 
     Returns (final_state, final_ig, infos) with infos stacked over I0:
-      hist (I0, s_max+1), n_aggregated (I0,), n_idle (I0,), ...
+      hist (I0, s_max+1) and, unless lite, n_aggregated (I0,), ...
     """
     def body(carry, inp):
         st, g = carry
         c, ai = inp
         st, g, info = step(st, g, c, ai.astype(bool), s_max=s_max)
-        return (st, g), info
+        return (st, g), ({"hist": info["hist"]} if lite else info)
 
     (state, ig), infos = jax.lax.scan(
         body, (state, ig), (C_window, a.astype(jnp.int32)))
@@ -120,10 +129,11 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8):
 
 # vmap over candidate schedules: a (R, I0) -> infos stacked over R.
 def simulate_candidates(C_window, candidates, state: SatState, ig, *,
-                        s_max: int = 8):
+                        s_max: int = 8, lite: bool = False):
     """`simulate_window` vmapped over candidate schedules (axis 0)."""
     return jax.vmap(lambda a: simulate_window(C_window, a, state, ig,
-                                              s_max=s_max))(candidates)
+                                              s_max=s_max, lite=lite)
+                    )(candidates)
 
 
 # ---------------------------------------------------------------------------

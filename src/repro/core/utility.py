@@ -16,6 +16,7 @@ random forest regression") and a JAX MLP (beyond-paper alternative).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
@@ -43,6 +44,30 @@ def featurize(hist: np.ndarray, status: float) -> np.ndarray:
                           axis=-1)
 
 
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def _featurize_jnp(hist, status, *, s_max: int):
+    hist = hist.astype(jnp.float32)
+    total = hist.sum(axis=-1, keepdims=True)
+    s_vals = jnp.arange(s_max + 1, dtype=jnp.float32)
+    # c(s) table precomputed on host so both featurize paths share the
+    # exact same float32 constants
+    c = jnp.asarray((np.arange(s_max + 1, dtype=np.float32) + 1.0) ** -0.5)
+    fresh_mass = (hist * c).sum(axis=-1, keepdims=True)
+    mean_stale = (hist * s_vals).sum(axis=-1, keepdims=True) \
+        / jnp.maximum(total, 1.0)
+    stat = jnp.broadcast_to(jnp.float32(status), total.shape)
+    return jnp.concatenate([hist, total, fresh_mass, mean_stale, stat],
+                           axis=-1)
+
+
+def featurize_jnp(hist, status):
+    """Device-resident `featurize`: same features, jnp end-to-end (accepts
+    and returns jnp arrays; XLA reduction order may differ from the host
+    path by ~1 ulp)."""
+    return _featurize_jnp(hist, jnp.float32(status),
+                          s_max=hist.shape[-1] - 1)
+
+
 # ---------------------------------------------------------------------------
 # Random forest (numpy CART ensemble)
 
@@ -56,6 +81,85 @@ class _Node:
     value: float = 0.0
 
 
+@dataclass(frozen=True)
+class ForestArrays:
+    """Structure-of-arrays view of a fitted forest: (n_trees, max_nodes)
+    per-node fields, leaf-padded so every tree shares one node axis.
+    `feature < 0` marks a leaf; leaf left/right self-loop to node 0 so the
+    level-wise traversal below is branch-free."""
+    feature: np.ndarray    # (T, M) int32, -1 at leaves / padding
+    thresh: np.ndarray     # (T, M) f32
+    left: np.ndarray       # (T, M) int32
+    right: np.ndarray      # (T, M) int32
+    value: np.ndarray      # (T, M) f32
+    depth: int             # max root-to-leaf edge count
+
+
+def forest_to_arrays(trees: List[List[_Node]], max_depth: int
+                     ) -> ForestArrays:
+    T = len(trees)
+    M = max(len(t) for t in trees)
+    feature = np.full((T, M), -1, np.int32)
+    thresh = np.zeros((T, M), np.float32)
+    left = np.zeros((T, M), np.int32)
+    right = np.zeros((T, M), np.int32)
+    value = np.zeros((T, M), np.float32)
+    for ti, nodes in enumerate(trees):
+        for ni, n in enumerate(nodes):
+            feature[ti, ni] = n.feature
+            thresh[ti, ni] = n.thresh
+            left[ti, ni] = max(n.left, 0)
+            right[ti, ni] = max(n.right, 0)
+            value[ti, ni] = n.value
+    return ForestArrays(feature, thresh, left, right, value, max_depth)
+
+
+def forest_predict_np(fa: ForestArrays, X: np.ndarray) -> np.ndarray:
+    """Vectorized level-wise traversal: every (tree, row) pair walks one
+    level per iteration; rows already at a leaf stay put. Bit-matches the
+    per-row node walk (same leaf values, same f32 mean over trees)."""
+    X = np.asarray(X, np.float32)
+    T, N = fa.feature.shape[0], X.shape[0]
+    rows = np.arange(T)[:, None]
+    cols = np.arange(N)[None, :]
+    idx = np.zeros((T, N), np.int32)
+    for _ in range(fa.depth):
+        f = fa.feature[rows, idx]
+        leaf = f < 0
+        xv = X[cols, np.clip(f, 0, X.shape[1] - 1)]
+        go_left = xv <= fa.thresh[rows, idx]
+        nxt = np.where(go_left, fa.left[rows, idx], fa.right[rows, idx])
+        idx = np.where(leaf, idx, nxt)
+    return fa.value[rows, idx].mean(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_predict_device(feature, thresh, left, right, value, offsets,
+                           X, *, depth: int):
+    """Level-wise traversal over the flattened forest. All node fields are
+    1-D (total_nodes,) arrays and `offsets` (T, 1) holds each tree's root
+    index: 1-D `jnp.take` gathers lower much faster on CPU than the 2-D
+    take_along_axis equivalent. left/right store tree-local child indices,
+    hence the `offsets +` rebase each level."""
+    T = offsets.shape[0]
+    N, F = X.shape
+    Xf = X.reshape(-1)
+    cols = jnp.arange(N)[None, :]
+
+    def body(_, idx):
+        f = jnp.take(feature, idx)
+        leaf = f < 0
+        xv = jnp.take(Xf, cols * F + jnp.clip(f, 0, F - 1))
+        go_left = xv <= jnp.take(thresh, idx)
+        nxt = offsets + jnp.where(go_left, jnp.take(left, idx),
+                                  jnp.take(right, idx))
+        return jnp.where(leaf, idx, nxt)
+
+    idx = jax.lax.fori_loop(0, depth, body,
+                            jnp.broadcast_to(offsets, (T, N)))
+    return jnp.take(value, idx).mean(axis=0)
+
+
 class RandomForestRegressor:
     def __init__(self, n_trees: int = 40, max_depth: int = 6,
                  min_leaf: int = 4, feature_frac: float = 0.8,
@@ -66,6 +170,8 @@ class RandomForestRegressor:
         self.feature_frac = feature_frac
         self.seed = seed
         self.trees: List[List[_Node]] = []
+        self._arrays: Optional[ForestArrays] = None
+        self._device_arrays = None
 
     def _build(self, X, y, rng) -> List[_Node]:
         nodes: List[_Node] = []
@@ -116,7 +222,15 @@ class RandomForestRegressor:
         for _ in range(self.n_trees):
             boot = rng.integers(0, len(y), len(y))
             self.trees.append(self._build(X[boot], y[boot], rng))
+        self._arrays = None
+        self._device_arrays = None
         return self
+
+    def arrays(self) -> ForestArrays:
+        """Structure-of-arrays view, built once per fit."""
+        if self._arrays is None:
+            self._arrays = forest_to_arrays(self.trees, self.max_depth)
+        return self._arrays
 
     def _predict_tree(self, nodes: List[_Node], X) -> np.ndarray:
         out = np.empty(len(X), np.float32)
@@ -128,10 +242,31 @@ class RandomForestRegressor:
             out[i] = nodes[n].value
         return out
 
-    def predict(self, X) -> np.ndarray:
+    def predict_reference(self, X) -> np.ndarray:
+        """Per-row, per-tree node walk — the O(rows * trees) pure-Python
+        oracle the vectorized paths are tested against."""
         X = np.asarray(X, np.float32)
         return np.mean([self._predict_tree(t, X) for t in self.trees],
                        axis=0)
+
+    def predict(self, X) -> np.ndarray:
+        X = np.asarray(X, np.float32)
+        return forest_predict_np(self.arrays(), X)
+
+    def predict_device(self, X):
+        """jit-compatible prediction on a jnp feature batch; stays on
+        device (the schedule search feeds simulator histograms straight in
+        with no host round-trip)."""
+        fa = self.arrays()
+        if self._device_arrays is None:
+            T, M = fa.feature.shape
+            offsets = (np.arange(T, dtype=np.int32) * M)[:, None]
+            self._device_arrays = tuple(
+                jnp.asarray(a.reshape(-1))
+                for a in (fa.feature, fa.thresh, fa.left, fa.right,
+                          fa.value)) + (jnp.asarray(offsets),)
+        return _forest_predict_device(*self._device_arrays,
+                                      jnp.asarray(X), depth=fa.depth)
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +326,12 @@ class MLPRegressor:
     def predict(self, X) -> np.ndarray:
         Xn = (np.asarray(X, np.float32) - self.mu) / self.sd
         return np.asarray(self._apply(self.params, Xn)) * self.ysd + self.ymu
+
+    def predict_device(self, X):
+        """jit-compatible prediction on a jnp feature batch (see
+        RandomForestRegressor.predict_device)."""
+        Xn = (X.astype(jnp.float32) - self.mu) / self.sd
+        return self._apply(self.params, Xn) * self.ysd + self.ymu
 
 
 # ---------------------------------------------------------------------------

@@ -68,6 +68,37 @@ class MlpFmowAdapter:
         return (jnp.asarray(self._X_train[idx]),
                 jnp.asarray(self._y_train[idx]))
 
+    def _client_batch_indices(self, client_ids, round_rng: int,
+                              batch_size: int, num_batches: int):
+        """Index batches for a client set, restricted to the modal batch
+        width so they stack. Returns (idx (M, num_batches, b), rows), rows
+        being the positions of `client_ids` included; clients with empty
+        shards or off-modal widths are left to the per-client fallback."""
+        idxs = [self.clients[i].batches(round_rng, batch_size, num_batches)
+                for i in client_ids]
+        widths = [ix.shape[1] for ix in idxs]
+        counts = {}
+        for w in widths:
+            if w > 0:
+                counts[w] = counts.get(w, 0) + 1
+        if not counts:
+            return None, []
+        modal = max(counts, key=lambda w: (counts[w], w))
+        rows = [r for r, w in enumerate(widths) if w == modal]
+        return np.stack([idxs[r] for r in rows]), rows
+
+    def client_batch_many(self, client_ids, round_rng: int, batch_size: int,
+                          num_batches: int):
+        """Batched `client_batch`: one host gather + one device transfer
+        for the whole client set (bit-identical batches to the per-client
+        calls). Returns (stacked batch with leading dim M, rows)."""
+        idx, rows = self._client_batch_indices(client_ids, round_rng,
+                                               batch_size, num_batches)
+        if not rows:
+            return None, []
+        return (jnp.asarray(self._X_train[idx]),
+                jnp.asarray(self._y_train[idx])), rows
+
     def eval_batch(self, max_n: int = 2048):
         return jnp.asarray(self._X_val[:max_n]), \
             jnp.asarray(self._y_val[:max_n])
@@ -124,6 +155,17 @@ class DenseNetFmowAdapter(MlpFmowAdapter):
             return None
         imgs = np.stack([self.data.images(row, "train") for row in idx])
         return jnp.asarray(imgs), jnp.asarray(self._y_train[idx])
+
+    def client_batch_many(self, client_ids, round_rng, batch_size,
+                          num_batches):
+        idx, rows = self._client_batch_indices(client_ids, round_rng,
+                                               batch_size, num_batches)
+        if not rows:
+            return None, []
+        s = self.data.spec.image_size
+        imgs = self.data.images(idx.reshape(-1), "train").reshape(
+            idx.shape + (s, s, 3))
+        return (jnp.asarray(imgs), jnp.asarray(self._y_train[idx])), rows
 
     def accuracy(self, params, max_n: int = 1024) -> float:
         pred = jnp.argmax(self.apply(params, self._val_X[:max_n]), axis=-1)

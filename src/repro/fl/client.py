@@ -1,19 +1,24 @@
 """Satellite-side local training (paper eq. 3): E SGD steps from the last
 received global model; the update g_k = w_k^E - w_k^0 is held until the next
-ground-station contact."""
-from __future__ import annotations
+ground-station contact.
 
-import functools
+Two entry points share one update body: `make_client_update` (one satellite
+per call — utility-sample generation, pretraining) and
+`make_batched_client_update` (a vmapped stack of satellites per call — the
+engine's aggregation hot path, with the optional top-k compression
+roundtrip fused into the same jitted program). vmap keeps per-satellite
+results bit-identical to the sequential calls, so the batched engine
+reproduces the seed trajectory exactly.
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.fl.compression import roundtrip
 
-def make_client_update(adapter, *, local_steps: int, lr: float,
-                       trainable_mask=None):
-    """Returns update_fn(base_params, batches) -> g_k (pytree delta)."""
 
-    @jax.jit
+def _make_update_fn(adapter, *, lr: float, trainable_mask=None):
     def update_fn(params, batches):
         def body(p, batch):
             g = jax.grad(adapter.loss)(p, batch)
@@ -25,6 +30,16 @@ def make_client_update(adapter, *, local_steps: int, lr: float,
         final, _ = jax.lax.scan(body, params, batches)
         return jax.tree.map(lambda a, b: a - b, final, params)
 
+    return update_fn
+
+
+def make_client_update(adapter, *, local_steps: int, lr: float,
+                       trainable_mask=None):
+    """Returns update_fn(base_params, client_idx, round_rng) -> g_k
+    (pytree delta)."""
+    update_fn = jax.jit(_make_update_fn(adapter, lr=lr,
+                                        trainable_mask=trainable_mask))
+
     def client_update(base_params, client_idx: int, round_rng: int,
                       batch_size: int = 32):
         batch = adapter.client_batch(client_idx, round_rng, batch_size,
@@ -34,3 +49,26 @@ def make_client_update(adapter, *, local_steps: int, lr: float,
         return update_fn(base_params, batch)
 
     return client_update
+
+
+def make_batched_client_update(adapter, *, local_steps: int, lr: float,
+                               trainable_mask=None, uplink_topk: float = 0.0):
+    """Returns update_many(base_params, batches) -> stacked g_k.
+
+    `batches` is the per-satellite batch pytree stacked on a leading axis M;
+    the base model is shared (broadcast). One jitted program trains all M
+    satellites and, when `uplink_topk > 0`, applies the top-k/int8 uplink
+    roundtrip to each update before returning — no per-satellite dispatch,
+    no host round-trip between training and compression.
+    """
+    update_fn = _make_update_fn(adapter, lr=lr,
+                                trainable_mask=trainable_mask)
+
+    @jax.jit
+    def update_many(base_params, batches):
+        u = jax.vmap(update_fn, in_axes=(None, 0))(base_params, batches)
+        if uplink_topk > 0.0:
+            u = jax.vmap(lambda t: roundtrip(t, uplink_topk)[0])(u)
+        return u
+
+    return update_many

@@ -28,10 +28,10 @@ import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointStore
 from repro.core import staleness as SS
-from repro.core.aggregation import apply_aggregation
+from repro.core.aggregation import aggregation_weights
 from repro.core.scheduler import Scheduler
-from repro.fl.client import make_client_update
-from repro.fl.compression import roundtrip
+from repro.fl.client import make_batched_client_update, make_client_update
+from repro.kernels.agg.ops import aggregate_params_tree
 
 T0_MINUTES = 15.0
 
@@ -134,7 +134,10 @@ class SimulationEngine:
         this for early stopping)."""
         self._stop_requested = True
 
-    def run(self) -> SimResult:
+    def prepare(self) -> None:
+        """Initialize run state (model, client-update programs, checkpoint
+        store, per-satellite protocol arrays). `run` calls this; benchmarks
+        and tests call it directly to drive individual protocol steps."""
         cfg = self.config
         self.scheduler.reset()
         self._stop_requested = False
@@ -147,6 +150,9 @@ class SimulationEngine:
         self._client_update = make_client_update(
             self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
             trainable_mask=mask)
+        self._batched_update = make_batched_client_update(
+            self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
+            trainable_mask=mask, uplink_topk=cfg.uplink_topk)
 
         self.store = CheckpointStore(keep_in_memory=cfg.s_max + 26)
         self.store.put(0, self.params)
@@ -160,6 +166,9 @@ class SimulationEngine:
         self.result.staleness_hist = np.zeros(cfg.s_max + 1, np.int64)
         self.status = float(self.adapter.val_loss(self.params))
 
+    def run(self) -> SimResult:
+        cfg = self.config
+        self.prepare()
         try:
             self._emit("on_run_begin")
             for i in range(self.num_windows):
@@ -208,22 +217,25 @@ class SimulationEngine:
             connectivity=self.C, status=self.status)
 
     def on_aggregate(self, i: int) -> None:
-        """Apply the staleness-compensated buffered update (eq. 4)."""
+        """Apply the staleness-compensated buffered update (eq. 4).
+
+        Client training is batched: buffered satellites are grouped by base
+        model version (and batch shape), each group trains under one
+        vmapped jitted call — with the optional uplink compression fused in
+        (see `make_batched_client_update`) — instead of one dispatch plus
+        checkpoint fetch per satellite. The weighted reduction then routes
+        through the aggregation kernel (`aggregate_params_tree`: Pallas on
+        TPU, bit-identical jnp elsewhere). Per-satellite updates are
+        bit-identical to the sequential path, so trajectories match the
+        seed engine exactly.
+        """
         cfg = self.config
         ks = np.flatnonzero(self.buffered_base >= 0)
         stal = self.ig - self.buffered_base[ks]
-        updates = []
-        for k in ks:
-            base = self.store.get(int(self.buffered_base[k]))
-            u = self._client_update(base, int(k), round_rng=i,
-                                    batch_size=cfg.batch_size)
-            if cfg.uplink_topk > 0.0:   # beyond-paper: compressed uplink
-                u, _ = roundtrip(u, cfg.uplink_topk)
-            updates.append(u)
-        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
-        self.params = apply_aggregation(self.params, stack,
-                                        jnp.asarray(stal), alpha=cfg.alpha,
-                                        server_lr=cfg.server_lr)
+        stack = self._train_buffered(ks, round_rng=i)
+        w = aggregation_weights(jnp.asarray(stal), cfg.alpha) \
+            * cfg.server_lr
+        self.params = aggregate_params_tree(self.params, stack, w)
         self.ig += 1
         self.store.put(self.ig, self.params)
         refs = np.concatenate([self.pending, self.buffered_base])
@@ -237,6 +249,76 @@ class SimulationEngine:
         self._emit("on_aggregate_end", i,
                    {"ig": self.ig, "n_aggregated": len(ks),
                     "staleness": stal.tolist()})
+
+    def _train_buffered(self, ks: np.ndarray, *, round_rng: int):
+        """Compute the buffered satellites' updates, batched by base model
+        version. Returns the update stack (leading dim len(ks)) in `ks`
+        order, matching the staleness vector.
+
+        Per base version: one checkpoint fetch, one batched data gather
+        (`adapter.client_batch_many` when available — a single host gather
+        + device transfer), one vmapped jitted training call. Satellites
+        the batched gather can't serve (empty shards, off-modal batch
+        widths) fall back to per-satellite batches, grouped by shape."""
+        cfg = self.config
+        by_base = {}   # base version -> [(row in ks, client id)]
+        for row, k in enumerate(ks):
+            by_base.setdefault(int(self.buffered_base[k]),
+                               []).append((row, int(k)))
+        many = getattr(self.adapter, "client_batch_many", None)
+        order, chunks, zero_rows = [], [], []
+        for base_v, members in by_base.items():
+            base = self.store.get(base_v)       # fetched once per group
+            rest = range(len(members))
+            if many is not None:
+                stacked, used = many([k for _, k in members], round_rng,
+                                     cfg.batch_size, cfg.local_steps)
+                if used:
+                    chunks.append(self._run_batched(base, stacked,
+                                                    len(used)))
+                    order += [members[u][0] for u in used]
+                    rest = [j for j in rest if j not in set(used)]
+            by_shape = {}  # leftovers / no batched gather: group by shape
+            for j in rest:
+                row, k = members[j]
+                batch = self.adapter.client_batch(k, round_rng,
+                                                  cfg.batch_size,
+                                                  cfg.local_steps)
+                if batch is None:
+                    zero_rows.append(row)
+                    continue
+                sig = tuple(tuple(leaf.shape)
+                            for leaf in jax.tree.leaves(batch))
+                by_shape.setdefault(sig, []).append((row, batch))
+            for mem in by_shape.values():
+                batches = jax.tree.map(lambda *bs: jnp.stack(bs),
+                                       *[b for _, b in mem])
+                chunks.append(self._run_batched(base, batches, len(mem)))
+                order += [row for row, _ in mem]
+        if zero_rows:
+            chunks.append(jax.tree.map(
+                lambda p: jnp.zeros((len(zero_rows),) + p.shape, p.dtype),
+                self.params))
+            order += zero_rows
+        inv = np.argsort(np.asarray(order))     # back to ks order
+        return jax.tree.map(lambda *cs: jnp.concatenate(cs, axis=0)[inv],
+                            *chunks)
+
+    def _run_batched(self, base, batches, m: int):
+        """Run the vmapped client-update program on a group of m
+        satellites, padded to the next power of two (repeating row 0) so
+        the jitted program compiles O(log K) distinct batch sizes over a
+        run instead of one per observed group size. Rows are independent
+        under vmap, so the real rows are unaffected by padding."""
+        bucket = 1 << (m - 1).bit_length()
+        if bucket == m:
+            return self._batched_update(base, batches)
+        batches = jax.tree.map(
+            lambda b: jnp.concatenate(
+                [b, jnp.broadcast_to(b[:1], (bucket - m,) + b.shape[1:])],
+                axis=0), batches)
+        return jax.tree.map(lambda u: u[:m],
+                            self._batched_update(base, batches))
 
     def on_downloads(self, i: int, conn: np.ndarray) -> None:
         """Connected satellites fetch the current global model and start a

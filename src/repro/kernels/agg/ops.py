@@ -1,4 +1,14 @@
-"""jit'd public API for the aggregation kernel: flat and pytree forms."""
+"""jit'd public API for the aggregation kernel: flat and pytree forms.
+
+Dispatch policy (`interpret=None`, the default): on TPU the compiled Pallas
+kernel runs; off TPU the pure-jnp oracle runs instead. The oracle is
+bit-identical to the eager tensordot reduction the FL engine historically
+used (the Pallas *interpreter* is not — its per-block elementwise reduce
+accumulates in a different order), so CPU trajectories stay reproducible
+while TPU gets the kernel. Pass `interpret=True` explicitly to run the
+kernel through the Pallas interpreter (tests do, to validate the kernel
+logic off-TPU).
+"""
 from __future__ import annotations
 
 import jax
@@ -11,7 +21,10 @@ from repro.kernels.agg.ref import weighted_aggregate_ref
 
 def aggregate_flat(params_flat, updates, weights, *, interpret=None):
     if interpret is None:
-        interpret = not on_tpu()
+        if on_tpu():
+            interpret = False
+        else:
+            return weighted_aggregate_ref(params_flat, updates, weights)
     return weighted_aggregate(params_flat, updates, weights,
                               interpret=interpret)
 

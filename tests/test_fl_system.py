@@ -128,8 +128,9 @@ def test_apply_aggregation_kernel_path_matches(key):
         lambda p: jax.random.normal(jax.random.fold_in(key, 2),
                                     (4,) + p.shape), params)
     stal = jnp.asarray([0, 1, 2, 3])
-    a = apply_aggregation(params, upds, stal, use_kernel=False)
-    b = apply_aggregation(params, upds, stal, use_kernel=True)
+    a = apply_aggregation(params, upds, stal)               # jnp off-TPU
+    b = apply_aggregation(params, upds, stal, interpret=True)   # kernel
+
     jax.tree.map(lambda x, y: np.testing.assert_allclose(
         np.asarray(x), np.asarray(y), atol=1e-5), a, b)
 

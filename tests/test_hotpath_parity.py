@@ -1,0 +1,300 @@
+"""Parity tests for the vectorized simulation hot paths.
+
+Strict-parity contract of the vectorization PR:
+  * the structure-of-arrays numpy forest predict bit-matches the per-row
+    node-walk reference;
+  * the jit/JAX forest predict and featurize match to XLA reduction-order
+    tolerance, and the end-to-end `fedspace_search` still selects the
+    identical schedule;
+  * the batched `on_aggregate` (grouped vmapped client training, fused
+    top-k compression, kernel-routed reduction) reproduces the seed
+    engine's per-satellite-loop trajectory bit-identically;
+  * `aggregate_params_tree` agrees between the Pallas interpreter and the
+    jnp tensordot oracle, and the default off-TPU dispatch is bit-identical
+    to the oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity as CN
+from repro.core import staleness as SS
+from repro.core.search import fedspace_search, infer_n_range
+from repro.core.utility import (RandomForestRegressor, featurize,
+                                featurize_jnp)
+from repro.data.fmow import FmowSpec, SyntheticFmow
+from repro.data.partition import iid_partition
+from repro.data.pipeline import make_clients
+from repro.fl.adapters import MlpFmowAdapter
+from repro.fl.compression import roundtrip
+from repro.fl.engine import EngineConfig, SimulationEngine
+from repro.core.scheduler import make_scheduler
+from repro.kernels import on_tpu
+from repro.kernels.agg.ops import aggregate_params_tree
+
+
+def _fit_forest(seed, *, n_trees=15, max_depth=5, n=300, F=13):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, F)).astype(np.float32)
+    y = (2 * X[:, 0] + np.sin(6 * X[:, 3])
+         + 0.1 * rng.normal(size=n)).astype(np.float32)
+    rf = RandomForestRegressor(n_trees=n_trees, max_depth=max_depth,
+                               seed=seed).fit(X, y)
+    return rf, rng
+
+
+def _fit_hist_forest(seed, *, s_max=8, n=400):
+    """Forest over the search feature space (staleness histograms)."""
+    rng = np.random.default_rng(seed)
+    hists = rng.integers(0, 25, (n, s_max + 1)).astype(np.float32)
+    X = featurize(hists, 1.0)
+    s = np.arange(s_max + 1, dtype=np.float32)
+    y = ((hists * (1.2 - 0.3 * s)).sum(1)
+         / np.maximum(hists.sum(1), 1.0)
+         + 0.05 * rng.normal(size=n)).astype(np.float32)
+    return RandomForestRegressor(n_trees=20, max_depth=6, seed=seed
+                                 ).fit(X, y)
+
+
+class _NodeWalkHost:
+    """Seed-style regressor facade: pure-Python node walk, host featurize
+    (no predict_device => score_candidates takes the host path)."""
+
+    def __init__(self, rf):
+        self._rf = rf
+
+    def predict(self, X):
+        return self._rf.predict_reference(X)
+
+
+# ---------------------------------------------------------------------------
+# forest inference
+
+
+@pytest.mark.parametrize("seed,depth,trees", [(0, 5, 15), (1, 6, 30),
+                                              (2, 2, 5), (3, 8, 10)])
+def test_soa_predict_bitmatches_node_walk(seed, depth, trees):
+    rf, rng = _fit_forest(seed, n_trees=trees, max_depth=depth)
+    X = rng.random((500, 13)).astype(np.float32)
+    ref = rf.predict_reference(X)
+    fast = rf.predict(X)
+    assert np.array_equal(ref, fast)
+
+
+def test_device_predict_matches_node_walk():
+    rf, rng = _fit_forest(0)
+    X = rng.random((500, 13)).astype(np.float32)
+    ref = rf.predict_reference(X)
+    dev = np.asarray(rf.predict_device(jnp.asarray(X)))
+    np.testing.assert_allclose(dev, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_featurize_jnp_matches_host():
+    rng = np.random.default_rng(0)
+    hist = rng.integers(0, 30, (128, 9)).astype(np.float32)
+    host = featurize(hist, 0.7)
+    dev = np.asarray(featurize_jnp(jnp.asarray(hist), 0.7))
+    assert dev.shape == host.shape
+    np.testing.assert_allclose(dev, host, rtol=1e-6, atol=1e-5)
+    # integer-exact features are bit-exact
+    assert np.array_equal(dev[:, :9], host[:, :9])       # raw histogram
+    assert np.array_equal(dev[:, 9], host[:, 9])         # total count
+
+
+def test_fedspace_search_selects_identical_schedule():
+    """The acceptance gate: same rng seed => same selected schedule on the
+    device path as on the seed node-walk/host path."""
+    rf = _fit_hist_forest(0)
+    rng = np.random.default_rng(5)
+    K, I0 = 24, 24
+    C = rng.random((I0, K)) < 0.2
+    state = SS.bootstrap_state(K)
+    ref = fedspace_search(np.random.default_rng(7), C, state, 0,
+                          _NodeWalkHost(rf), 1.0, num_candidates=512)
+    opt = fedspace_search(np.random.default_rng(7), C, state, 0, rf, 1.0,
+                          num_candidates=512)
+    assert np.array_equal(ref, opt)
+
+
+def test_infer_n_range_matches_loop_reference():
+    rf = _fit_hist_forest(1)
+
+    def reference(regressor, uploads_per_window, I0, status, *, s_max=8,
+                  K=None, halfwidth=4):
+        best_n, best_u = 1, -np.inf
+        n_cap = max(1, I0 // 2)
+        total = uploads_per_window * I0
+        for n in range(1, n_cap + 1):
+            per = total / n
+            if K:
+                per = min(per, K)
+            hist = np.zeros(s_max + 1, np.float32)
+            hist[0] = per * 0.7
+            hist[1] = per * 0.3
+            u = n * float(regressor.predict(featurize(hist[None],
+                                                      status))[0])
+            if u > best_u:
+                best_n, best_u = n, u
+        return max(1, best_n - halfwidth), min(n_cap, best_n + halfwidth)
+
+    rng = np.random.default_rng(2)
+    upws = [0.5, 2.0, 5.0, 11.0] + list(rng.uniform(0.1, 20.0, 40))
+    for upw in upws:
+        for K in (None, 16):
+            assert infer_n_range(rf, upw, 24, 1.0, K=K) \
+                == reference(rf, upw, 24, 1.0, K=K), (upw, K)
+
+
+# ---------------------------------------------------------------------------
+# batched aggregation round
+
+
+class _SeedLoopEngine(SimulationEngine):
+    """`on_aggregate` transcribed from the seed engine: one jitted client
+    update per buffered satellite, per-satellite checkpoint fetch,
+    sequential compression roundtrip, stack-tensordot-add aggregation."""
+
+    def on_aggregate(self, i):
+        from repro.core.staleness import staleness_compensation
+        cfg = self.config
+        ks = np.flatnonzero(self.buffered_base >= 0)
+        stal = self.ig - self.buffered_base[ks]
+        updates = []
+        for k in ks:
+            base = self.store.get(int(self.buffered_base[k]))
+            u = self._client_update(base, int(k), round_rng=i,
+                                    batch_size=cfg.batch_size)
+            if cfg.uplink_topk > 0.0:
+                u, _ = roundtrip(u, cfg.uplink_topk)
+            updates.append(u)
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+        c = staleness_compensation(jnp.asarray(stal), cfg.alpha)
+        w = c / jnp.maximum(jnp.sum(c), 1e-12) * cfg.server_lr
+        delta = jax.tree.map(
+            lambda u_: jnp.tensordot(w.astype(jnp.float32),
+                                     u_.astype(jnp.float32), axes=1), stack)
+        self.params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            self.params, delta)
+        self.ig += 1
+        self.store.put(self.ig, self.params)
+        refs = np.concatenate([self.pending, self.buffered_base])
+        refs = refs[refs >= 0]
+        self.store.prune(int(refs.min()) if refs.size else self.ig)
+        res = self.result
+        res.num_global_updates += 1
+        res.num_aggregated_gradients += len(ks)
+        np.add.at(res.staleness_hist, np.clip(stal, 0, cfg.s_max), 1)
+        self.buffered_base[:] = -1
+        self._emit("on_aggregate_end", i,
+                   {"ig": self.ig, "n_aggregated": len(ks),
+                    "staleness": stal.tolist()})
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    spec = CN.ConstellationSpec(num_satellites=16)
+    C = CN.connectivity_sets(spec, days=1.0)
+    data = SyntheticFmow(FmowSpec(num_train=800, num_val=200))
+    adapter = MlpFmowAdapter(data, make_clients(iid_partition(800, 16, 0)))
+    return C, adapter
+
+
+def test_batched_aggregate_bit_identical_trajectory(tiny_world):
+    C, adapter = tiny_world
+    cfg = dict(eval_every=16, max_windows=64)
+    ref_eng = _SeedLoopEngine(C, adapter, make_scheduler("fedbuff", M=4),
+                              EngineConfig(**cfg))
+    ref = ref_eng.run()
+    new_eng = SimulationEngine(C, adapter, make_scheduler("fedbuff", M=4),
+                               EngineConfig(**cfg))
+    new = new_eng.run()
+    assert new.summary() == ref.summary()
+    assert new.accuracy == ref.accuracy
+    assert new.val_loss == ref.val_loss
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        new_eng.params, ref_eng.params)
+
+
+def test_batched_aggregate_with_fused_compression(tiny_world):
+    """Compressed-uplink mode: the fused in-jit roundtrip matches the
+    sequential eager one to ~1 ulp (XLA strength-reduces the /127 dequant
+    constant inside the fused program), so the trajectory agrees to float
+    noise; all integer protocol counters are exact."""
+    C, adapter = tiny_world
+    cfg = dict(eval_every=16, max_windows=64, uplink_topk=0.25)
+    ref_eng = _SeedLoopEngine(C, adapter, make_scheduler("fedbuff", M=4),
+                              EngineConfig(**cfg))
+    ref = ref_eng.run()
+    new_eng = SimulationEngine(C, adapter, make_scheduler("fedbuff", M=4),
+                               EngineConfig(**cfg))
+    new = new_eng.run()
+    assert new.num_global_updates == ref.num_global_updates
+    assert new.num_aggregated_gradients == ref.num_aggregated_gradients
+    assert new.staleness_hist.tolist() == ref.staleness_hist.tolist()
+    assert new.windows_run == ref.windows_run
+    np.testing.assert_allclose(new.val_loss, ref.val_loss, atol=1e-5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), atol=1e-7),
+        new_eng.params, ref_eng.params)
+
+
+def test_batched_aggregate_handles_empty_shards():
+    """Satellites with empty shards contribute exact-zero updates, batched
+    alongside trained ones."""
+    K = 8
+    rng = np.random.default_rng(0)
+    C = rng.random((32, K)) < 0.4
+    data = SyntheticFmow(FmowSpec(num_train=200, num_val=50))
+    parts = iid_partition(200, K - 2, 0) + [np.array([], np.int64)] * 2
+    adapter = MlpFmowAdapter(data, make_clients(parts))
+    cfg = dict(eval_every=16, max_windows=32)
+    ref = _SeedLoopEngine(C, adapter, make_scheduler("async"),
+                          EngineConfig(**cfg)).run()
+    new = SimulationEngine(C, adapter, make_scheduler("async"),
+                           EngineConfig(**cfg)).run()
+    assert new.summary() == ref.summary()
+    assert new.accuracy == ref.accuracy
+
+
+# ---------------------------------------------------------------------------
+# aggregation kernel routing
+
+
+def _rand_tree(rng, M):
+    params = {"w": jnp.asarray(rng.normal(size=(17, 23)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(11,)).astype(np.float32))}
+    upds = jax.tree.map(
+        lambda p: jnp.asarray(
+            rng.normal(size=(M,) + p.shape).astype(np.float32)), params)
+    w = jnp.asarray(rng.random(M).astype(np.float32))
+    return params, upds, w
+
+
+def test_aggregate_params_tree_interpret_matches_tensordot():
+    rng = np.random.default_rng(3)
+    params, upds, w = _rand_tree(rng, 6)
+    ref = jax.tree.map(
+        lambda p, u: p + jnp.tensordot(w, u.astype(jnp.float32), axes=1),
+        params, upds)
+    interp = aggregate_params_tree(params, upds, w, interpret=True)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5), interp, ref)
+
+
+@pytest.mark.skipif(on_tpu(), reason="off-TPU dispatch contract")
+def test_aggregate_params_tree_default_bitmatches_tensordot_off_tpu():
+    """The engine's default dispatch must stay bit-identical to the eager
+    tensordot reduction the seed engine used."""
+    rng = np.random.default_rng(4)
+    params, upds, w = _rand_tree(rng, 9)
+    ref = jax.tree.map(
+        lambda p, u: p + jnp.tensordot(w, u.astype(jnp.float32), axes=1),
+        params, upds)
+    out = aggregate_params_tree(params, upds, w)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), out, ref)
