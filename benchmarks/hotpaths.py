@@ -1,5 +1,5 @@
-"""Hot-path benchmark: the two simulation bottlenecks, seed path vs
-vectorized path, with machine-readable output.
+"""Hot-path benchmark: the simulation bottlenecks, seed path vs
+vectorized/device-resident path, with machine-readable output.
 
 1. **Schedule-search re-plan** (eq. 13): one `fedspace_search` call at the
    paper's shapes — `num_candidates` schedules over an I0-window horizon,
@@ -14,6 +14,15 @@ vectorized path, with machine-readable output.
    stack+tensordot; the optimized path groups satellites by base version,
    trains each group under a single vmapped jitted call, and routes the
    reduction through the aggregation kernel dispatch.
+3. **Window loop** (Algorithm 1): the engine's protocol loop at
+   K ∈ {34, 191, 1000}. The seed path kept per-satellite state in numpy
+   and rebuilt a device SatState for the scheduler every window; the
+   device-resident engine holds SatState on device and advances whole
+   chunks of windows per jitted scan (`repro.fl.engine._scan_windows`),
+   with a parity check of every protocol counter and the final state.
+4. **Utility sampler** (eq. 12): `generate_utility_samples` per-sample
+   loop vs the vectorized path (client updates grouped by base checkpoint
+   and vmapped, perturbed checkpoints evaluated in vmapped loss calls).
 
 Writes results to ``BENCH_hotpaths.json`` at the repo root (``--smoke``
 writes ``BENCH_hotpaths.smoke.json`` instead so CI runs never clobber the
@@ -174,11 +183,12 @@ def _seed_aggregate(eng, i: int):
     fetch per satellite, sequential compression, stack-tensordot-add),
     without the bookkeeping; returns the new global params."""
     cfg = eng.config
-    ks = np.flatnonzero(eng.buffered_base >= 0)
-    stal = eng.ig - eng.buffered_base[ks]
+    buffered = eng.buffered_base
+    ks = np.flatnonzero(buffered >= 0)
+    stal = eng.ig - buffered[ks]
     updates = []
     for k in ks:
-        base = eng.store.get(int(eng.buffered_base[k]))
+        base = eng.store.get(int(buffered[k]))
         u = eng._client_update(base, int(k), round_rng=i,
                                batch_size=cfg.batch_size)
         if cfg.uplink_topk > 0.0:
@@ -200,9 +210,10 @@ def _batched_aggregate(eng, i: int):
     from repro.core.aggregation import aggregation_weights
     from repro.kernels.agg.ops import aggregate_params_tree
     cfg = eng.config
-    ks = np.flatnonzero(eng.buffered_base >= 0)
-    stal = eng.ig - eng.buffered_base[ks]
-    stack = eng._train_buffered(ks, round_rng=i)
+    buffered = eng.buffered_base
+    ks = np.flatnonzero(buffered >= 0)
+    stal = eng.ig - buffered[ks]
+    stack = eng._train_buffered(ks, buffered, round_rng=i)
     w = aggregation_weights(jnp.asarray(stal), cfg.alpha) * cfg.server_lr
     return aggregate_params_tree(eng.params, stack, w)
 
@@ -231,8 +242,10 @@ def bench_aggregation(smoke: bool) -> dict:
     for v in range(1, n_versions):
         eng.store.put(v, eng.params)
     eng.ig = n_versions - 1
-    eng.buffered_base[:] = rng.integers(0, n_versions, K)
-    eng.version[:] = eng.ig
+    eng.state = SS.SatState(
+        jnp.full((K,), eng.ig, jnp.int32),
+        jnp.asarray(eng.pending, jnp.int32),
+        jnp.asarray(rng.integers(0, n_versions, K), jnp.int32))
 
     def timed(fn):
         fn(eng, 3)                    # warm the jit caches
@@ -259,6 +272,191 @@ def bench_aggregation(smoke: bool) -> dict:
         "t_batched_s": t_opt,
         "speedup": t_ref / t_opt,
         "params_bit_equal": bool(bit_equal),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. window loop
+
+
+class _NullAdapter:
+    """Protocol-isolating adapter: tiny model, zero-gradient loss, so the
+    engine's window loop is what gets measured, not client training."""
+
+    def __init__(self, K):
+        self.clients = list(range(K))
+
+    def init(self, key):
+        return {"w": jnp.zeros((2,))}
+
+    def loss(self, params, batch):
+        return jnp.sum(params["w"]) * 0.0 + jnp.sum(batch) * 0.0
+
+    def client_batch(self, ci, round_rng, batch_size, num_batches):
+        return jnp.zeros((num_batches, 1))
+
+    def accuracy(self, params):
+        return 0.0
+
+    def val_loss(self, params):
+        return 0.0
+
+
+def _seed_window_loop(C, num_windows, decide, *, s_max=8):
+    """The seed engine's host window loop (protocol only): per-satellite
+    numpy arrays, a device SatState rebuilt for the scheduler EVERY window
+    (the PR-2 `fl/engine.py` behavior the device-resident engine retired).
+    Returns the final protocol state and counters for the parity check."""
+    K = C.shape[1]
+    version = np.zeros(K, np.int64)
+    pending = np.zeros(K, np.int64)
+    buffered = np.full(K, -1, np.int64)
+    ig = total = idle = n_agg = 0
+    hist = np.zeros(s_max + 1, np.int64)
+    for i in range(num_windows):
+        conn = C[i]
+        total += int(conn.sum())
+        has_pending = conn & (pending >= 0)
+        idle += int((conn & ~has_pending & (version == ig)).sum())
+        buffered[has_pending] = pending[has_pending]
+        pending[has_pending] = -1
+        n_buf = int((buffered >= 0).sum())
+        state = SS.SatState(jnp.asarray(version, jnp.int32),
+                            jnp.asarray(pending, jnp.int32),
+                            jnp.asarray(buffered, jnp.int32))
+        if decide(i, n_buf, state, ig) and n_buf > 0:
+            ks = np.flatnonzero(buffered >= 0)
+            np.add.at(hist, np.clip(ig - buffered[ks], 0, s_max), 1)
+            n_agg += len(ks)
+            ig += 1
+            buffered[:] = -1
+        behind = conn & (version < ig)
+        version[behind] = ig
+        pending[behind] = ig
+    return {"version": version, "pending": pending, "ig": ig,
+            "total": total, "idle": idle, "n_agg": n_agg, "hist": hist}
+
+
+def bench_window_loop(smoke: bool) -> dict:
+    Ks = [16] if smoke else [34, 191, 1000]
+    W = 64 if smoke else 2048
+    Wp = 48 if smoke else 256         # parity run (with aggregations)
+    out = {"windows": W, "per_K": {}}
+    for K in Ks:
+        rng = np.random.default_rng(0)
+        C = rng.random((W, K)) < 0.08
+        adapter = _NullAdapter(K)
+
+        # throughput: no aggregations => the loop is pure protocol
+        M_never = K + 1
+        cfg = EngineConfig(eval_every=W, max_windows=W)
+
+        def run_device():
+            eng = SimulationEngine(C, adapter,
+                                   make_scheduler("fedbuff", M=M_never),
+                                   cfg)
+            t0 = time.perf_counter()
+            eng.run()
+            return time.perf_counter() - t0, eng
+
+        def run_seed():
+            t0 = time.perf_counter()
+            fin = _seed_window_loop(C, W,
+                                    lambda i, nb, st, ig: nb >= M_never)
+            return time.perf_counter() - t0, fin
+
+        t_dev_cold, eng = run_device()
+        assert eng._fast_ok
+        t_dev = min(run_device()[0] for _ in range(3))
+        t_seed = min(run_seed()[0] for _ in range(3))
+
+        # parity: aggregation-bearing schedule, every protocol counter and
+        # the final state must match the seed loop exactly
+        M = max(2, K // 8)
+        Cp = np.random.default_rng(1).random((Wp, K)) < 0.08
+        fin = _seed_window_loop(Cp, Wp, lambda i, nb, st, ig: nb >= M)
+        peng = SimulationEngine(Cp, adapter,
+                                make_scheduler("fedbuff", M=M),
+                                EngineConfig(eval_every=Wp, max_windows=Wp))
+        pres = peng.run()
+        parity = (
+            np.array_equal(peng.version, fin["version"])
+            and np.array_equal(peng.pending, fin["pending"])
+            and peng.ig == fin["ig"]
+            and pres.total_connections == fin["total"]
+            and pres.idle_connections == fin["idle"]
+            and pres.num_aggregated_gradients == fin["n_agg"]
+            and pres.staleness_hist.tolist() == fin["hist"].tolist())
+
+        out["per_K"][str(K)] = {
+            "t_seed_loop_s": t_seed,
+            "t_device_loop_s": t_dev,
+            "t_device_loop_cold_s": t_dev_cold,
+            "windows_per_s_seed": W / t_seed,
+            "windows_per_s_device": W / t_dev,
+            "speedup": t_seed / t_dev,
+            "state_and_counters_identical": bool(parity),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 4. utility sampler
+
+
+def bench_utility_sampler(smoke: bool) -> dict:
+    from repro.core.utility import generate_utility_samples
+    from repro.fl.client import (make_batched_client_update,
+                                 make_client_update)
+    from repro.fl.fedspace_setup import pretrain_trajectory
+    num_train = 400 if smoke else 2000
+    K = 12 if smoke else 40
+    n_samples = 12 if smoke else 150
+    cps = 8 if smoke else 32
+    local_steps = 2 if smoke else 4
+    data = SyntheticFmow(FmowSpec(num_train=num_train, num_val=200))
+    adapter = MlpFmowAdapter(data, make_clients(
+        iid_partition(num_train, K, 0)), hidden=48)
+    traj = pretrain_trajectory(adapter, rounds=8, clients_per_round=8,
+                               local_steps=local_steps, client_lr=0.3,
+                               seed=0)
+    cu = make_client_update(adapter, local_steps=local_steps, lr=0.3)
+
+    def upd_fn(base, ci, r):
+        return cu(base, ci, round_rng=int(r))
+
+    common = dict(num_clients=K, n_samples=n_samples, s_max=8,
+                  clients_per_sample=cps, seed=3)
+    val_batch = adapter.eval_batch()
+    vec_kw = dict(
+        batch_fn=lambda ci, r: adapter.client_batch(ci, int(r), 32,
+                                                    local_steps),
+        batched_update_fn=make_batched_client_update(
+            adapter, local_steps=local_steps, lr=0.3),
+        batched_loss_fn=jax.jit(jax.vmap(
+            lambda p: adapter.loss(p, val_batch))))
+
+    def run(kw):
+        t0 = time.perf_counter()
+        X, y = generate_utility_samples(
+            jax.random.PRNGKey(0), traj, upd_fn,
+            lambda p: adapter.val_loss(p), **common, **kw)
+        return time.perf_counter() - t0, X, y
+
+    t_vec_cold, Xv, yv = run(vec_kw)
+    t_vec = min(run(vec_kw)[0] for _ in range(2))
+    t_loop, Xl, yl = run({})
+    t_loop = min(t_loop, run({})[0])
+    return {
+        "n_samples": n_samples, "clients_per_sample": cps,
+        "num_clients": K, "local_steps": local_steps,
+        "t_loop_s": t_loop,
+        "t_vectorized_s": t_vec,
+        "t_vectorized_cold_s": t_vec_cold,
+        "speedup": t_loop / t_vec,
+        "features_identical": bool(np.array_equal(Xl, Xv)),
+        "targets_max_abs_diff": float(np.abs(yl - yv).max()),
+        "targets_close": bool(np.allclose(yl, yv, atol=1e-5)),
     }
 
 
@@ -291,6 +489,17 @@ def main() -> None:
     print(f"aggregation_round: reference {agg['t_reference_s']:.3f}s, "
           f"batched {agg['t_batched_s']:.3f}s ({agg['speedup']:.1f}x), "
           f"params_bit_equal={agg['params_bit_equal']}", flush=True)
+    wloop = bench_window_loop(args.smoke)
+    for K, r in wloop["per_K"].items():
+        print(f"window_loop K={K}: seed {r['windows_per_s_seed']:.0f} "
+              f"win/s, device {r['windows_per_s_device']:.0f} win/s "
+              f"({r['speedup']:.1f}x), parity="
+              f"{r['state_and_counters_identical']}", flush=True)
+    usamp = bench_utility_sampler(args.smoke)
+    print(f"utility_sampler: loop {usamp['t_loop_s']:.3f}s, vectorized "
+          f"{usamp['t_vectorized_s']:.3f}s ({usamp['speedup']:.1f}x), "
+          f"features_identical={usamp['features_identical']}, "
+          f"targets_close={usamp['targets_close']}", flush=True)
 
     result = {
         "meta": {
@@ -304,13 +513,19 @@ def main() -> None:
         },
         "search_replan": search,
         "aggregation_round": agg,
+        "window_loop": wloop,
+        "utility_sampler": usamp,
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
     print(f"# wrote {out_path} ({result['meta']['bench_wall_s']}s total)")
 
-    if not (search["schedule_identical"] and agg["params_bit_equal"]):
+    window_parity = all(r["state_and_counters_identical"]
+                        for r in wloop["per_K"].values())
+    if not (search["schedule_identical"] and agg["params_bit_equal"]
+            and window_parity and usamp["features_identical"]
+            and usamp["targets_close"]):
         raise SystemExit("parity violation — see JSON output")
 
 

@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import (CheckpointStore, load_pytree, save_pytree)
+from repro.ckpt.checkpoint import (CheckpointStore, DeviceCheckpointStore,
+                                   load_pytree, save_pytree)

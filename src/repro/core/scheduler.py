@@ -8,11 +8,38 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import staleness as SS
 from repro.core.search import fedspace_search
 from repro.fl.registry import SCHEDULERS, register_scheduler
+
+
+# Device-side aggregation indicators, consumed inside the engine's jitted
+# window scan. Module-level (stable identity) so jit caches one program per
+# scheduler kind, not per scheduler instance; instance knobs (K, M, the
+# FedSpace schedule) travel as the `args` array pytree instead.
+
+def _sync_indicator(t, n_buf, args):
+    return n_buf >= args                       # args = K
+
+
+def _async_indicator(t, n_buf, args):
+    return n_buf > 0
+
+
+def _fedbuff_indicator(t, n_buf, args):
+    return n_buf >= args                       # args = M
+
+
+def _periodic_indicator(t, n_buf, args):
+    return (n_buf > 0) & ((t + 1) % args == 0)  # args = period
+
+
+def _fedspace_indicator(t, n_buf, args):
+    sched, start = args
+    return sched[t - start] > 0
 
 
 class Scheduler:
@@ -25,6 +52,18 @@ class Scheduler:
                ig: int, connectivity: np.ndarray, status: float) -> bool:
         raise NotImplementedError
 
+    def device_plan(self, i: int, *, K: int, state: SS.SatState, ig: int,
+                    connectivity: np.ndarray, status: float):
+        """Fast-path hook for the device-resident engine: return
+        ``(indicator_fn, args, horizon)`` where ``indicator_fn(t, n_buf,
+        args) -> bool`` is jnp-traceable and decides a^t (t absolute window
+        index, n_buf the post-upload buffer occupancy) for every window in
+        ``[i, i + horizon)`` (``horizon=None`` = rest of the run) without a
+        per-window ``decide`` call. Return None (the default) to force the
+        engine onto the per-window host loop — correct for any scheduler,
+        required for ones with per-window host state or side effects."""
+        return None
+
 
 @register_scheduler("sync")
 class SyncScheduler(Scheduler):
@@ -34,6 +73,9 @@ class SyncScheduler(Scheduler):
     def decide(self, i, *, n_in_buffer, K, **_):
         return n_in_buffer >= K
 
+    def device_plan(self, i, *, K, **_):
+        return _sync_indicator, jnp.int32(K), None
+
 
 @register_scheduler("async")
 class AsyncScheduler(Scheduler):
@@ -42,6 +84,9 @@ class AsyncScheduler(Scheduler):
 
     def decide(self, i, *, n_in_buffer, **_):
         return n_in_buffer > 0
+
+    def device_plan(self, i, **_):
+        return _async_indicator, jnp.int32(0), None
 
 
 @register_scheduler("fedbuff")
@@ -55,6 +100,9 @@ class FedBuffScheduler(Scheduler):
     def decide(self, i, *, n_in_buffer, **_):
         return n_in_buffer >= self.M
 
+    def device_plan(self, i, **_):
+        return _fedbuff_indicator, jnp.int32(self.M), None
+
 
 @register_scheduler("periodic")
 class PeriodicScheduler(Scheduler):
@@ -67,6 +115,9 @@ class PeriodicScheduler(Scheduler):
 
     def decide(self, i, *, n_in_buffer, **_):
         return n_in_buffer > 0 and (i + 1) % self.period == 0
+
+    def device_plan(self, i, **_):
+        return _periodic_indicator, jnp.int32(self.period), None
 
 
 @register_scheduler("fedspace")
@@ -93,30 +144,53 @@ class FedSpaceScheduler(Scheduler):
         self._schedule: Optional[np.ndarray] = None
         self._window_start = -1
 
+    def _ensure_schedule(self, i, *, state, ig, connectivity, status):
+        """(Re-)plan at I0 boundaries (eq. 13). `state` must be the
+        post-upload state at window i — that is what `decide` receives from
+        the engine, and what the search's simulator assumes."""
+        if self._schedule is not None and \
+                (i % self.I0 != 0 or self._window_start == i):
+            return
+        Cw = connectivity[i:i + self.I0]
+        if Cw.shape[0] < self.I0:   # pad the tail of the horizon
+            pad = np.zeros((self.I0 - Cw.shape[0], Cw.shape[1]), bool)
+            Cw = np.concatenate([Cw, pad], axis=0)
+        n_min, n_max = self.n_min, self.n_max
+        if n_min is None or n_max is None:
+            from repro.core.search import infer_n_range
+            inf_min, inf_max = infer_n_range(
+                self.regressor, float(Cw.mean(axis=1).sum()) / self.I0
+                * Cw.shape[1], self.I0, status, s_max=self.s_max,
+                K=Cw.shape[1])
+            n_min = n_min if n_min is not None else inf_min
+            n_max = n_max if n_max is not None else inf_max
+        self._schedule = fedspace_search(
+            self._rng, Cw, state, ig, self.regressor, status,
+            n_min=n_min, n_max=n_max,
+            num_candidates=self.num_candidates, s_max=self.s_max)
+        self._window_start = i
+
     def decide(self, i, *, n_in_buffer, K, state, ig, connectivity, status,
                **_):
-        offset = i % self.I0
-        if offset == 0 or self._schedule is None:
-            Cw = connectivity[i:i + self.I0]
-            if Cw.shape[0] < self.I0:   # pad the tail of the horizon
-                pad = np.zeros((self.I0 - Cw.shape[0], Cw.shape[1]), bool)
-                Cw = np.concatenate([Cw, pad], axis=0)
-            n_min, n_max = self.n_min, self.n_max
-            if n_min is None or n_max is None:
-                from repro.core.search import infer_n_range
-                inf_min, inf_max = infer_n_range(
-                    self.regressor, float(Cw.mean(axis=1).sum()) / self.I0
-                    * Cw.shape[1], self.I0, status, s_max=self.s_max,
-                    K=Cw.shape[1])
-                n_min = n_min if n_min is not None else inf_min
-                n_max = n_max if n_max is not None else inf_max
-            self._schedule = fedspace_search(
-                self._rng, Cw, state, ig, self.regressor, status,
-                n_min=n_min, n_max=n_max,
-                num_candidates=self.num_candidates, s_max=self.s_max)
-            self._window_start = i
+        self._ensure_schedule(i, state=state, ig=ig,
+                              connectivity=connectivity, status=status)
         a = bool(self._schedule[i - self._window_start])
         return a and n_in_buffer > 0
+
+    def device_plan(self, i, *, K, state, ig, connectivity, status, **_):
+        if i % self.I0 == 0 or self._schedule is None:
+            # `decide` runs after the engine's upload step; replicate that
+            # here so the search scores the identical post-upload state
+            # (the scan recomputes this upload — one extra dispatch per
+            # re-plan, amortized over I0 windows)
+            conn = jnp.asarray(np.asarray(connectivity[i], bool))
+            state, _ = SS.upload_step(state, jnp.int32(ig), conn)
+            self._ensure_schedule(i, state=state, ig=ig,
+                                  connectivity=connectivity, status=status)
+        args = (jnp.asarray(self._schedule, jnp.int32),
+                jnp.int32(self._window_start))
+        return _fedspace_indicator, args, \
+            self._window_start + self.I0 - i
 
 
 def make_scheduler(name: str, **kw) -> Scheduler:

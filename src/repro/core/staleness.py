@@ -49,8 +49,77 @@ def bootstrap_state(K: int) -> SatState:
                     buffered=jnp.full((K,), -1, jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# Algorithm-1 sub-transitions. These three pure functions are THE protocol:
+# the schedule-search simulator scans their composition (`step`), and the FL
+# engine (repro.fl.engine) drives the same functions one event at a time, so
+# both layers share one transition semantics by construction.
+
+
+def upload_step(state: SatState, ig, connected):
+    """Phase 1 of a time index: connected satellites hand their pending
+    update to the GS buffer; idle contacts (eq. 10) are counted.
+
+    Returns (new_state, info) with masks/counters on device:
+      uploads (K,) bool, idle (K,) bool,
+      n_connected, n_idle, n_buffered — scalar int32.
+    """
+    has_pending = state.pending >= 0
+    uploads = connected & has_pending
+    buffered = jnp.where(uploads, state.pending, state.buffered)
+    pending = jnp.where(uploads, -1, state.pending)
+
+    # idle: connected, nothing to send, nothing new to fetch (eq. 10)
+    idle = connected & (~has_pending) & (state.version == ig)
+    info = {"uploads": uploads, "idle": idle,
+            "n_connected": jnp.sum(connected.astype(jnp.int32)),
+            "n_idle": jnp.sum(idle.astype(jnp.int32)),
+            "n_buffered": jnp.sum((buffered >= 0).astype(jnp.int32))}
+    return SatState(state.version, pending, buffered), info
+
+
+def aggregate_step(state: SatState, ig, aggregate, *, s_max: int):
+    """Phase 2: when a^i = 1 and the buffer is non-empty, consume the buffer
+    and advance the global version (a no-op on an empty buffer — eq. 4 has
+    nothing to sum; the global version must not advance spuriously).
+
+    Returns (new_state, new_ig, info) with:
+      hist (s_max+1,), n_aggregated, max_staleness, aggregated (K,) bool.
+    """
+    in_buffer = state.buffered >= 0
+    aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
+    stale = jnp.where(in_buffer, ig - state.buffered, 0)
+    stale_c = jnp.clip(stale, 0, s_max)
+    counted = in_buffer & aggregate
+    # histogram as compare+reduce rather than scatter-add: identical
+    # integer counts, but ~4x faster on CPU inside the vmapped search scan
+    # (XLA lowers the (R, K)->(R, s_max+1) scatter poorly there)
+    hist = jnp.sum((stale_c[..., None] == jnp.arange(s_max + 1))
+                   & counted[..., None], axis=-2, dtype=jnp.int32)
+    n_agg = jnp.sum(counted.astype(jnp.int32))
+    max_stale = jnp.max(jnp.where(counted, stale, 0))
+    new_ig = ig + aggregate.astype(jnp.int32)
+    buffered = jnp.where(aggregate, -1, state.buffered)
+    info = {"hist": hist, "n_aggregated": n_agg,
+            "max_staleness": max_stale, "aggregated": counted}
+    return SatState(state.version, state.pending, buffered), new_ig, info
+
+
+def download_step(state: SatState, ig, connected):
+    """Phase 3: connected satellites fetch the current global model and, if
+    it is newer than what they last received, start a fresh local round.
+
+    Returns (new_state, info) with the download mask on device.
+    """
+    gets_new = connected & (state.version < ig)
+    version = jnp.where(gets_new, ig, state.version)
+    pending = jnp.where(gets_new, ig, state.pending)
+    return SatState(version, pending, state.buffered), \
+        {"downloads": gets_new}
+
+
 def step(state: SatState, ig, connected, aggregate, *, s_max: int):
-    """One time index of the protocol.
+    """One time index of the protocol: upload ∘ aggregate ∘ download.
 
     Args:
       state: SatState (K,)
@@ -63,41 +132,12 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int):
       hist: (s_max+1,) counts of aggregated gradients per clipped staleness
       n_aggregated, n_idle, max_staleness (only meaningful when aggregate)
     """
-    # 1. upload pending updates
-    has_pending = state.pending >= 0
-    uploads = connected & has_pending
-    buffered = jnp.where(uploads, state.pending, state.buffered)
-    pending = jnp.where(uploads, -1, state.pending)
-
-    # idle: connected, nothing to send, nothing new to fetch (eq. 10)
-    idle = connected & (~has_pending) & (state.version == ig)
-    n_idle = jnp.sum(idle.astype(jnp.int32))
-
-    # 2. aggregate — a no-op on an empty buffer (eq. 4 has nothing to sum;
-    # the global version must not advance spuriously)
-    in_buffer = buffered >= 0
-    aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
-    stale = jnp.where(in_buffer, ig - buffered, 0)
-    stale_c = jnp.clip(stale, 0, s_max)
-    counted = in_buffer & aggregate
-    # histogram as compare+reduce rather than scatter-add: identical
-    # integer counts, but ~4x faster on CPU inside the vmapped search scan
-    # (XLA lowers the (R, K)->(R, s_max+1) scatter poorly there)
-    hist = jnp.sum((stale_c[..., None] == jnp.arange(s_max + 1))
-                   & counted[..., None], axis=-2, dtype=jnp.int32)
-    n_agg = jnp.sum(counted.astype(jnp.int32))
-    max_stale = jnp.max(jnp.where(counted, stale, 0))
-    new_ig = ig + aggregate.astype(jnp.int32)
-    buffered = jnp.where(aggregate, -1, buffered)
-
-    # 3. download
-    gets_new = connected & (state.version < new_ig)
-    version = jnp.where(gets_new, new_ig, state.version)
-    pending = jnp.where(gets_new, new_ig, pending)
-
-    info = {"hist": hist, "n_aggregated": n_agg, "n_idle": n_idle,
-            "max_staleness": max_stale}
-    return SatState(version, pending, buffered), new_ig, info
+    state, up = upload_step(state, ig, connected)
+    state, new_ig, agg = aggregate_step(state, ig, aggregate, s_max=s_max)
+    state, _ = download_step(state, new_ig, connected)
+    info = {"hist": agg["hist"], "n_aggregated": agg["n_aggregated"],
+            "n_idle": up["n_idle"], "max_staleness": agg["max_staleness"]}
+    return state, new_ig, info
 
 
 def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,

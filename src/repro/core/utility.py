@@ -338,6 +338,26 @@ class MLPRegressor:
 # Sample generation (eq. 12)
 
 
+def _pad_rows(tree, bucket: int):
+    """Pad a stacked pytree's leading axis to `bucket` rows by repeating
+    row 0 (rows are independent under vmap/segment_sum, so padded rows are
+    inert when their weights are zero)."""
+    return jax.tree.map(
+        lambda b: jnp.concatenate(
+            [b, jnp.broadcast_to(b[:1], (bucket - b.shape[0],)
+                                 + b.shape[1:])], axis=0), tree)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg",))
+def _segment_accumulate(totals, upd, seg, w, *, n_seg):
+    """totals[n] += sum over rows with seg == n of w_row * upd_row, per
+    leaf. One jitted scatter-reduce per update group."""
+    def add(t, u):
+        wb = w.reshape((-1,) + (1,) * (u.ndim - 1))
+        return t + jax.ops.segment_sum(u * wb, seg, num_segments=n_seg)
+    return jax.tree.map(add, totals, upd)
+
+
 def generate_utility_samples(
         key,
         checkpoints: List,                    # {w^0..w^Imax} pytrees
@@ -349,7 +369,11 @@ def generate_utility_samples(
         s_max: int = 8,
         clients_per_sample: int = 48,
         participate_p=None,
-        seed: int = 0):
+        seed: int = 0,
+        batch_fn: Optional[Callable] = None,
+        batched_update_fn: Optional[Callable] = None,
+        batched_loss_fn: Optional[Callable] = None,
+        eval_chunk: int = 64):
     """Returns (features (N,F), targets ΔF (N,)). Each sample: draw i_start
     and a staleness vector over a client subset, apply eq. 12 against the
     checkpoint trajectory and record the loss drop.
@@ -359,17 +383,29 @@ def generate_utility_samples(
     encounter (a 2-gradient aggregation moves the model as far as a
     90-gradient one under eq. 4's normalization, but with a far noisier
     direction — the count-utility curve is exactly what û must learn).
-    Updates are normalized by the participating count, matching eq. 4."""
+    Updates are normalized by the participating count, matching eq. 4.
+
+    When the batched machinery is supplied — ``batch_fn(ci, rng_int)``
+    returning the client's training batch (or None for an empty shard),
+    ``batched_update_fn(base, stacked_batches)`` (e.g.
+    `repro.fl.client.make_batched_client_update`), and
+    ``batched_loss_fn(stacked_params) -> (M,) losses`` — generation is
+    vectorized on the engine's machinery: sampled client updates are
+    grouped by base checkpoint and trained in vmapped jitted calls, and
+    the perturbed checkpoints are evaluated in vmapped loss calls instead
+    of one host round-trip per sample. The rng draw sequence is shared
+    with the loop path, so the integer staleness histograms (and thus the
+    features) are identical; targets agree to float tolerance (vmapped
+    per-client updates are bit-identical — only the update-sum and loss
+    reduction orders differ)."""
     rng = np.random.default_rng(seed)
     Imax = len(checkpoints) - 1
-    feats, targets = [], []
-    losses = {}
+    vectorized = (batch_fn is not None and batched_update_fn is not None
+                  and batched_loss_fn is not None)
 
-    def loss_at(i):
-        if i not in losses:
-            losses[i] = float(eval_loss_fn(checkpoints[i]))
-        return losses[i]
-
+    # --- draws (one rng stream, identical for both execution paths)
+    plans = []   # per sample: (i_start, hist, n_part, any participant)
+    items = []   # flattened work list: (sample, base ckpt idx, ci, rng_int)
     for n in range(n_samples):
         i_start = int(rng.integers(min(s_max, Imax - 1) if Imax > s_max
                                    else 0, Imax))
@@ -382,13 +418,105 @@ def generate_utility_samples(
         s_vec[part] = rng.integers(0, min(s_max, i_start) + 1,
                                    part.sum())
         n_part = max(int(part.sum()), 1)
-        total_update = None
-        for ci, s in zip(clients, s_vec):
-            if s < 0:
+        items += [(n, i_start - int(s), int(ci),
+                   int(rng.integers(0, 2 ** 31)))
+                  for ci, s in zip(clients, s_vec) if s >= 0]
+        hist = np.bincount(s_vec[s_vec >= 0], minlength=s_max + 1
+                           )[:s_max + 1]
+        plans.append((i_start, hist, n_part, bool(part.sum())))
+
+    if not vectorized:
+        return _samples_loop(checkpoints, client_update_fn, eval_loss_fn,
+                             plans, items)
+
+    # --- vectorized path: train grouped by base checkpoint ...
+    totals = jax.tree.map(
+        lambda l: jnp.zeros((n_samples,) + np.shape(l),
+                            jnp.asarray(l).dtype), checkpoints[0])
+    seg_all = np.asarray([it[0] for it in items], np.int32)
+    w_all = np.asarray([1.0 / plans[it[0]][2] for it in items], np.float32)
+    by_base = {}
+    for idx, it in enumerate(items):
+        by_base.setdefault(it[1], []).append(idx)
+    for base_i, idxs in by_base.items():
+        by_shape = {}   # batch-shape signature -> rows (into items)
+        for idx in idxs:
+            b = batch_fn(items[idx][2], items[idx][3])
+            if b is None:        # empty shard: exact-zero update, skip
                 continue
-            base = checkpoints[i_start - int(s)]
-            upd = client_update_fn(base, int(ci),
-                                   rng.integers(0, 2 ** 31))
+            sig = tuple(tuple(np.shape(leaf))
+                        for leaf in jax.tree.leaves(b))
+            by_shape.setdefault(sig, []).append((idx, b))
+        if not by_shape:
+            continue
+        base = jax.tree.map(jnp.asarray, checkpoints[base_i])
+        for mem in by_shape.values():
+            m = len(mem)
+            bucket = 1 << (m - 1).bit_length()
+            # pad with repeats of the first batch BEFORE stacking, so the
+            # stacked shapes (and every jit signature downstream) only come
+            # in power-of-two buckets — padded rows carry zero weight
+            blist = [b for _, b in mem] + [mem[0][1]] * (bucket - m)
+            batches = jax.tree.map(lambda *bs: jnp.stack(bs), *blist)
+            upd = batched_update_fn(base, batches)
+            rows = [idx for idx, _ in mem]
+            seg = np.zeros(bucket, np.int32)
+            w = np.zeros(bucket, np.float32)
+            seg[:m], w[:m] = seg_all[rows], w_all[rows]
+            totals = _segment_accumulate(totals, upd, jnp.asarray(seg),
+                                         jnp.asarray(w), n_seg=n_samples)
+
+    # --- ... and evaluate every base/perturbed checkpoint in vmapped calls
+    i_starts = np.asarray([p[0] for p in plans])
+    distinct = sorted(set(int(i) for i in i_starts))
+    base_stack = jax.tree.map(lambda *ls: jnp.stack(ls),
+                              *[checkpoints[i] for i in distinct])
+    T_by = dict(zip(distinct,
+                    np.asarray(batched_loss_fn(base_stack), np.float64)))
+    lookup = jnp.asarray([distinct.index(int(i)) for i in i_starts],
+                         jnp.int32)
+    new_loss = np.empty(n_samples, np.float64)
+    for c0 in range(0, n_samples, eval_chunk):
+        # materialize base + total only per chunk, so eval_chunk really
+        # bounds peak device memory on top of the `totals` accumulator
+        lk = lookup[c0:c0 + eval_chunk]
+        sl = jax.tree.map(
+            lambda b, t: jnp.take(b, lk, axis=0) + t[c0:c0 + eval_chunk],
+            base_stack, totals)
+        m = min(eval_chunk, n_samples - c0)
+        if m < eval_chunk:
+            sl = _pad_rows(sl, eval_chunk)
+        new_loss[c0:c0 + m] = np.asarray(batched_loss_fn(sl))[:m]
+
+    feats, targets = [], []
+    for n, (i_start, hist, _, any_part) in enumerate(plans):
+        T = float(T_by[i_start])
+        d_f = T - float(new_loss[n]) if any_part else 0.0
+        feats.append(featurize(hist, T))
+        targets.append(d_f)
+    return np.stack(feats), np.asarray(targets, np.float32)
+
+
+def _samples_loop(checkpoints, client_update_fn, eval_loss_fn, plans,
+                  items):
+    """The seed per-sample/per-client loop (kept as the reference path and
+    for callers without batched machinery): one client-update dispatch and
+    one host loss evaluation per sample."""
+    losses = {}
+
+    def loss_at(i):
+        if i not in losses:
+            losses[i] = float(eval_loss_fn(checkpoints[i]))
+        return losses[i]
+
+    per_sample = [[] for _ in plans]
+    for it in items:
+        per_sample[it[0]].append(it)
+    feats, targets = [], []
+    for n, (i_start, hist, n_part, _) in enumerate(plans):
+        total_update = None
+        for _, base_i, ci, rng_int in per_sample[n]:
+            upd = client_update_fn(checkpoints[base_i], ci, rng_int)
             upd = jax.tree.map(lambda x: x / n_part, upd)
             total_update = upd if total_update is None else jax.tree.map(
                 lambda a, b: a + b, total_update, upd)
@@ -399,8 +527,6 @@ def generate_utility_samples(
             new = jax.tree.map(lambda w, u: w + u, checkpoints[i_start],
                                total_update)
             d_f = T - float(eval_loss_fn(new))
-        hist = np.bincount(s_vec[s_vec >= 0], minlength=s_max + 1
-                           )[:s_max + 1]
         feats.append(featurize(hist, T))
         targets.append(d_f)
     return np.stack(feats), np.asarray(targets, np.float32)

@@ -167,6 +167,11 @@ class DenseNetFmowAdapter(MlpFmowAdapter):
             idx.shape + (s, s, 3))
         return (jnp.asarray(imgs), jnp.asarray(self._y_train[idx])), rows
 
+    def eval_batch(self, max_n: int = 1024):
+        # same slice as val_loss's default, so the utility sampler's
+        # vmapped loss sees the exact batch the loop path evaluates
+        return self._val_X[:max_n], self._val_y[:max_n]
+
     def accuracy(self, params, max_n: int = 1024) -> float:
         pred = jnp.argmax(self.apply(params, self._val_X[:max_n]), axis=-1)
         return float(jnp.mean((pred == self._val_y[:max_n]).astype(

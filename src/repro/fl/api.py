@@ -21,6 +21,13 @@ kwargs on a god-function:
 examples/, benchmarks/, and launch/: spec -> connectivity -> data ->
 partition -> clients -> adapter -> scheduler (including FedSpace's
 phase-1 trajectory/regressor when the scheduler needs it).
+
+Engines built here run device-resident by default: every registered
+scheduler exposes `device_plan`, so the window loop executes as chunked
+jitted scans over the shared Algorithm-1 transitions (see
+`repro.fl.engine`). Set `EngineConfig(fast_loop=False)` to force the
+per-window host loop — e.g. for callbacks that must observe protocol
+state at every window.
 """
 from __future__ import annotations
 

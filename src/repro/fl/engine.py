@@ -7,9 +7,22 @@ Time advances in T0 windows (15 min each). At window i the GS:
   staleness-compensated update of eq. 4 when a^i = 1 (`on_aggregate`), and
   broadcasts the current model (`on_downloads`).
 
-The engine mirrors exactly the protocol the schedule-search simulator
-(repro.core.staleness) assumes, with real gradients; the per-satellite
-integer state is the same SatState, so FedSpaceScheduler reads it directly.
+The per-satellite protocol state is the device-resident
+`repro.core.staleness.SatState`, advanced through the SAME jitted
+sub-transitions (`upload_step` / `aggregate_step` / `download_step`) the
+schedule-search simulator scans — one Algorithm-1 implementation shared by
+the engine, the search, and the utility sampler. The former numpy arrays
+(`version` / `pending` / `buffered_base`) survive as read-only host
+mirrors, materialized only at diagnostic points.
+
+Two execution strategies, same trajectory bit-for-bit:
+  * fast loop (default): when no protocol step is overridden and the
+    scheduler provides `device_plan`, windows run in chunked jitted scans
+    (`_scan_windows`) that stop at the first aggregation event — per-window
+    Python dispatch and device→host transfers disappear from the hot loop;
+  * host loop: per-window `on_uploads`/`on_decide`/`on_aggregate`/
+    `on_downloads` calls through the same transitions, taken automatically
+    for subclassed steps or schedulers without a device plan.
 
 Subclass and override a step to model protocol variants (ISL propagation,
 sink satellites, lossy links); attach `repro.fl.callbacks.Callback`s for
@@ -19,6 +32,7 @@ cross-cutting concerns (metric streaming, checkpointing, early stop).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -26,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt.checkpoint import CheckpointStore
+from repro.ckpt.checkpoint import DeviceCheckpointStore
 from repro.core import staleness as SS
 from repro.core.aggregation import aggregation_weights
 from repro.core.scheduler import Scheduler
@@ -35,6 +49,72 @@ from repro.kernels.agg.ops import aggregate_params_tree
 
 T0_MINUTES = 15.0
 
+# Upper bound on windows per jitted scan: chunks are bucketed to powers of
+# two up to this, so the scan compiles O(log) shapes per scheduler kind.
+_MAX_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# jitted protocol-transition wrappers (shared by both execution strategies)
+
+
+@jax.jit
+def _upload(state, ig, conn):
+    state, info = SS.upload_step(state, ig, conn)
+    return state, jnp.stack([info["n_connected"], info["n_idle"],
+                             info["n_buffered"]])
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def _aggregate_state(state, ig, *, s_max):
+    state, _, _ = SS.aggregate_step(state, ig, jnp.bool_(True), s_max=s_max)
+    return state
+
+
+@jax.jit
+def _download(state, ig, conn):
+    state, _ = SS.download_step(state, ig, conn)
+    return state
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("indicator", "horizon"))
+def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, *, indicator,
+                  horizon):
+    """Advance the protocol over up to `horizon` windows starting at
+    absolute window i0, freezing at the first window whose aggregation
+    indicator fires (post-upload, pre-aggregation — the engine trains and
+    aggregates on host, then resumes). `ig` is constant throughout: no
+    aggregation happens inside the scan. Windows at offset >= n_valid are
+    padding (bucketed horizon) and leave the state untouched.
+
+    Returns (state, counters (horizon, 4) int32) with per-window
+    [n_connected, n_idle, n_buffered, a]; counter rows after the event row
+    are garbage the caller must ignore.
+    """
+    Cw = jax.lax.dynamic_slice_in_dim(C_dev, i0, horizon, axis=0)
+    ts = i0 + jnp.arange(horizon)
+
+    def body(carry, inp):
+        st, done = carry
+        t, conn = inp
+        live = (~done) & (t - i0 < n_valid)
+        up_st, info = SS.upload_step(st, ig, conn)
+        n_buf = info["n_buffered"]
+        a = live & indicator(t, n_buf, ind_args) & (n_buf > 0)
+        dl_st, _ = SS.download_step(up_st, ig, conn)
+        nxt = _tree_where(live, _tree_where(a, up_st, dl_st), st)
+        counters = jnp.stack([info["n_connected"], info["n_idle"], n_buf,
+                              a.astype(jnp.int32)])
+        return (nxt, done | a), counters
+
+    (state, _), counters = jax.lax.scan(body, (state, jnp.bool_(False)),
+                                        (ts, Cw))
+    return state, counters
+
 
 @dataclass
 class SimResult:
@@ -42,7 +122,7 @@ class SimResult:
     accuracy: List[float] = field(default_factory=list)
     val_loss: List[float] = field(default_factory=list)
     eval_windows: List[int] = field(default_factory=list)
-    staleness_hist: np.ndarray = None
+    staleness_hist: Optional[np.ndarray] = None
     idle_connections: int = 0
     total_connections: int = 0
     num_global_updates: int = 0
@@ -88,6 +168,10 @@ class EngineConfig:
     seed: Optional[int] = None           # unset -> 0
     stop_at_target: bool = True
     uplink_topk: Optional[float] = None  # >0: compressed uplink; unset -> 0
+    # False forces the per-window host loop even when the chunked jitted
+    # fast loop would apply — e.g. for callbacks that must observe the
+    # device state at every single window boundary
+    fast_loop: bool = True
 
 
 class SimulationEngine:
@@ -96,6 +180,8 @@ class SimulationEngine:
     Protocol steps (`on_uploads`, `on_decide`, `on_aggregate`,
     `on_downloads`) are methods so scenario variants override exactly the
     step they change; callbacks observe the run without touching it.
+    Overriding any step (or a scheduler without `device_plan`) drops the
+    run onto the per-window host loop — same transitions, same trajectory.
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
@@ -134,9 +220,25 @@ class SimulationEngine:
         this for early stopping)."""
         self._stop_requested = True
 
+    @property
+    def version(self) -> np.ndarray:
+        """Host mirror of the last global version each satellite received.
+        Read-only diagnostic — the authoritative state is `self.state`."""
+        return np.asarray(self.state.version)
+
+    @property
+    def pending(self) -> np.ndarray:
+        """Host mirror of each satellite's pending-update base version."""
+        return np.asarray(self.state.pending)
+
+    @property
+    def buffered_base(self) -> np.ndarray:
+        """Host mirror of the GS buffer's per-satellite base versions."""
+        return np.asarray(self.state.buffered)
+
     def prepare(self) -> None:
         """Initialize run state (model, client-update programs, checkpoint
-        store, per-satellite protocol arrays). `run` calls this; benchmarks
+        ring, device-resident protocol state). `run` calls this; benchmarks
         and tests call it directly to drive individual protocol steps."""
         cfg = self.config
         self.scheduler.reset()
@@ -154,12 +256,21 @@ class SimulationEngine:
             self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
             trainable_mask=mask, uplink_topk=cfg.uplink_topk)
 
-        self.store = CheckpointStore(keep_in_memory=cfg.s_max + 26)
+        self.store = DeviceCheckpointStore(ring=cfg.s_max + 26)
         self.store.put(0, self.params)
         self.ig = 0
-        self.version = np.zeros(self.K, np.int64)   # model each sat holds
-        self.pending = np.zeros(self.K, np.int64)   # base of pending update
-        self.buffered_base = np.full(self.K, -1, np.int64)
+        # every satellite holds w^0 with a pending round on it (Alg. 1 init)
+        self.state = SS.bootstrap_state(self.K)
+        self._fast_ok = cfg.fast_loop and all(
+            getattr(type(self), m) is getattr(SimulationEngine, m)
+            for m in ("on_uploads", "on_decide", "on_aggregate",
+                      "on_downloads"))
+        # device copy of the run's connectivity, padded with _MAX_CHUNK
+        # all-false rows so a bucketed scan slice never clamps
+        self._C_dev = jnp.asarray(np.concatenate(
+            [self.C[:self.num_windows],
+             np.zeros((_MAX_CHUNK, self.K), bool)])) \
+            if self._fast_ok else None
 
         self.result = SimResult(scheme=self.scheduler.name,
                                 target_acc=cfg.target_acc)
@@ -167,23 +278,16 @@ class SimulationEngine:
         self.status = float(self.adapter.val_loss(self.params))
 
     def run(self) -> SimResult:
-        cfg = self.config
         self.prepare()
         try:
             self._emit("on_run_begin")
-            for i in range(self.num_windows):
-                conn = self.C[i]
-                n_buf = self.on_uploads(i, conn)
-                a = self.on_decide(i, n_buf)
-                if a and n_buf > 0:
-                    self.on_aggregate(i)
-                self.on_downloads(i, conn)
-                self.result.windows_run = i + 1
-                stop = False
-                if (i + 1) % cfg.eval_every == 0 \
-                        or i == self.num_windows - 1:
-                    stop = self.evaluate(i)
-                self._emit("on_window_end", i)
+            i = 0
+            while i < self.num_windows:
+                chunk = self._fast_chunk_plan(i) if self._fast_ok else None
+                if chunk is None:
+                    i, stop = self._run_window(i)
+                else:
+                    i, stop = self._run_chunk(i, *chunk)
                 if stop or self._stop_requested:
                     break
         finally:
@@ -192,28 +296,100 @@ class SimulationEngine:
             self._emit("on_run_end", self.result)
         return self.result
 
+    # ---------------------------------------------------- host window loop
+
+    def _run_window(self, i: int):
+        """One window through the overridable protocol-step methods.
+        Returns (next window, stop)."""
+        cfg = self.config
+        conn = self.C[i]
+        n_buf = self.on_uploads(i, conn)
+        a = self.on_decide(i, n_buf)
+        if a and n_buf > 0:
+            self.on_aggregate(i)
+        self.on_downloads(i, conn)
+        self.result.windows_run = i + 1
+        stop = False
+        if (i + 1) % cfg.eval_every == 0 or i == self.num_windows - 1:
+            stop = self.evaluate(i)
+        self._emit("on_window_end", i)
+        return i + 1, stop
+
+    # --------------------------------------------------- chunked fast loop
+
+    def _fast_chunk_plan(self, i: int):
+        """Ask the scheduler for a device-side indicator valid from window
+        i; clip the chunk to eval boundaries (where `status` changes) and
+        the scan-size bucket cap. Returns (indicator, args, end) or None."""
+        plan = self.scheduler.device_plan(
+            i, K=self.K, state=self.state, ig=self.ig, connectivity=self.C,
+            status=self.status)
+        if plan is None:
+            return None
+        fn, args, horizon = plan
+        end = i + (int(horizon) if horizon is not None
+                   else self.num_windows - i)
+        ev = self.config.eval_every
+        end = min(end, self.num_windows, (i // ev + 1) * ev, i + _MAX_CHUNK)
+        return fn, args, end
+
+    def _run_chunk(self, i: int, fn, args, end: int):
+        """Advance windows [i, end) through jitted scans, dropping back to
+        host exactly at aggregation events. One device→host transfer of the
+        per-window counters per scan; protocol ints and model trajectory
+        are bit-identical to the per-window loop. Returns (next, stop)."""
+        cfg, res = self.config, self.result
+        w = i
+        while w < end:
+            H = end - w
+            bucket = 1 << (H - 1).bit_length()
+            self.state, counters = _scan_windows(
+                self.state, jnp.int32(self.ig), self._C_dev, jnp.int32(w),
+                jnp.int32(H), args, indicator=fn, horizon=bucket)
+            counters = np.asarray(counters)
+            advanced = H
+            for j in range(H):
+                n_conn, n_idle, _, a = (int(x) for x in counters[j])
+                res.total_connections += n_conn
+                res.idle_connections += n_idle
+                res.windows_run = w + j + 1
+                if a:
+                    self.on_aggregate(w + j)
+                    self.on_downloads(w + j, self.C[w + j])
+                stop = False
+                if (w + j + 1) % cfg.eval_every == 0 \
+                        or w + j == self.num_windows - 1:
+                    stop = self.evaluate(w + j)
+                self._emit("on_window_end", w + j)
+                if stop or self._stop_requested:
+                    return w + j + 1, True
+                if a:        # scan froze at the event; rescan from w+j+1
+                    advanced = j + 1
+                    break
+            w += advanced
+        return w, False
+
     # -------------------------------------------------------- protocol steps
 
     def on_uploads(self, i: int, conn: np.ndarray) -> int:
-        """Connected satellites hand their pending update to the GS buffer.
-        Returns the buffer occupancy. Vectorized over the constellation."""
+        """Connected satellites hand their pending update to the GS buffer
+        (shared `upload_step` transition on device). Returns the buffer
+        occupancy."""
         res = self.result
-        res.total_connections += int(conn.sum())
-        has_pending = conn & (self.pending >= 0)
-        # idle contact: nothing to upload and model already current
-        res.idle_connections += int(
-            (conn & ~has_pending & (self.version == self.ig)).sum())
-        self.buffered_base[has_pending] = self.pending[has_pending]
-        self.pending[has_pending] = -1
-        return int((self.buffered_base >= 0).sum())
+        self.state, counters = _upload(
+            self.state, jnp.int32(self.ig),
+            jnp.asarray(np.asarray(conn, bool)))
+        n_conn, n_idle, n_buf = (int(x) for x in np.asarray(counters))
+        res.total_connections += n_conn
+        res.idle_connections += n_idle
+        return n_buf
 
     def on_decide(self, i: int, n_buf: int) -> bool:
-        """Ask the scheduler for the aggregation indicator a^i."""
-        state = SS.SatState(jnp.asarray(self.version, jnp.int32),
-                            jnp.asarray(self.pending, jnp.int32),
-                            jnp.asarray(self.buffered_base, jnp.int32))
+        """Ask the scheduler for the aggregation indicator a^i. The
+        device-resident SatState is handed over as-is — no per-window
+        host-array rebuild."""
         return self.scheduler.decide(
-            i, n_in_buffer=n_buf, K=self.K, state=state, ig=self.ig,
+            i, n_in_buffer=n_buf, K=self.K, state=self.state, ig=self.ig,
             connectivity=self.C, status=self.status)
 
     def on_aggregate(self, i: int) -> None:
@@ -223,48 +399,52 @@ class SimulationEngine:
         model version (and batch shape), each group trains under one
         vmapped jitted call — with the optional uplink compression fused in
         (see `make_batched_client_update`) — instead of one dispatch plus
-        checkpoint fetch per satellite. The weighted reduction then routes
-        through the aggregation kernel (`aggregate_params_tree`: Pallas on
-        TPU, bit-identical jnp elsewhere). Per-satellite updates are
-        bit-identical to the sequential path, so trajectories match the
-        seed engine exactly.
+        checkpoint fetch per satellite. Base checkpoints come out of the
+        device ring (`DeviceCheckpointStore`), so no host→device transfer
+        per base version; the weighted reduction routes through the
+        aggregation kernel (`aggregate_params_tree`: Pallas on TPU,
+        bit-identical jnp elsewhere). The buffer contents are materialized
+        to host once here — the grouping and data gather are host work.
         """
         cfg = self.config
-        ks = np.flatnonzero(self.buffered_base >= 0)
-        stal = self.ig - self.buffered_base[ks]
-        stack = self._train_buffered(ks, round_rng=i)
+        buffered = np.asarray(self.state.buffered)
+        ks = np.flatnonzero(buffered >= 0)
+        stal = (self.ig - buffered[ks]).astype(np.int64)
+        stack = self._train_buffered(ks, buffered, round_rng=i)
         w = aggregation_weights(jnp.asarray(stal), cfg.alpha) \
             * cfg.server_lr
         self.params = aggregate_params_tree(self.params, stack, w)
+        self.state = _aggregate_state(self.state, jnp.int32(self.ig),
+                                      s_max=cfg.s_max)
         self.ig += 1
         self.store.put(self.ig, self.params)
-        refs = np.concatenate([self.pending, self.buffered_base])
+        refs = np.concatenate([np.asarray(self.state.pending), buffered])
         refs = refs[refs >= 0]
         self.store.prune(int(refs.min()) if refs.size else self.ig)
         res = self.result
         res.num_global_updates += 1
         res.num_aggregated_gradients += len(ks)
         np.add.at(res.staleness_hist, np.clip(stal, 0, cfg.s_max), 1)
-        self.buffered_base[:] = -1
         self._emit("on_aggregate_end", i,
                    {"ig": self.ig, "n_aggregated": len(ks),
                     "staleness": stal.tolist()})
 
-    def _train_buffered(self, ks: np.ndarray, *, round_rng: int):
+    def _train_buffered(self, ks: np.ndarray, buffered: np.ndarray, *,
+                        round_rng: int):
         """Compute the buffered satellites' updates, batched by base model
         version. Returns the update stack (leading dim len(ks)) in `ks`
         order, matching the staleness vector.
 
-        Per base version: one checkpoint fetch, one batched data gather
-        (`adapter.client_batch_many` when available — a single host gather
-        + device transfer), one vmapped jitted training call. Satellites
-        the batched gather can't serve (empty shards, off-modal batch
-        widths) fall back to per-satellite batches, grouped by shape."""
+        Per base version: one checkpoint fetch (a device ring gather), one
+        batched data gather (`adapter.client_batch_many` when available — a
+        single host gather + device transfer), one vmapped jitted training
+        call. Satellites the batched gather can't serve (empty shards,
+        off-modal batch widths) fall back to per-satellite batches, grouped
+        by shape."""
         cfg = self.config
         by_base = {}   # base version -> [(row in ks, client id)]
         for row, k in enumerate(ks):
-            by_base.setdefault(int(self.buffered_base[k]),
-                               []).append((row, int(k)))
+            by_base.setdefault(int(buffered[k]), []).append((row, int(k)))
         many = getattr(self.adapter, "client_batch_many", None)
         order, chunks, zero_rows = [], [], []
         for base_v, members in by_base.items():
@@ -322,10 +502,9 @@ class SimulationEngine:
 
     def on_downloads(self, i: int, conn: np.ndarray) -> None:
         """Connected satellites fetch the current global model and start a
-        fresh local round on it. Vectorized over the constellation."""
-        behind = conn & (self.version < self.ig)
-        self.version[behind] = self.ig
-        self.pending[behind] = self.ig
+        fresh local round on it (shared `download_step` transition)."""
+        self.state = _download(self.state, jnp.int32(self.ig),
+                               jnp.asarray(np.asarray(conn, bool)))
 
     # --------------------------------------------------------------- eval
 

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.scheduler import make_scheduler
 from repro.core.utility import (MLPRegressor, RandomForestRegressor,
                                 generate_utility_samples)
-from repro.fl.client import make_client_update
+from repro.fl.client import make_batched_client_update, make_client_update
 
 
 def pretrain_trajectory(adapter, *, rounds: int = 40, clients_per_round: int
@@ -47,20 +47,36 @@ def fit_utility_regressor(adapter, trajectory, *, kind: str = "rf",
                           n_samples: int = 300, s_max: int = 8,
                           clients_per_sample: int = 48,
                           local_steps: int = 4, client_lr: float = 0.05,
-                          seed: int = 0):
+                          batch_size: int = 32, seed: int = 0):
     client_update = make_client_update(adapter, local_steps=local_steps,
                                        lr=client_lr)
 
     def upd_fn(base, ci, rng_int):
         # eq. 4 normalization by participating count happens inside
         # generate_utility_samples
-        return client_update(base, ci, round_rng=int(rng_int))
+        return client_update(base, ci, round_rng=int(rng_int),
+                             batch_size=batch_size)
+
+    # the engine's batched machinery vectorizes sample generation: vmapped
+    # client training grouped by base checkpoint + vmapped loss over the
+    # perturbed checkpoints. Adapters without `eval_batch` fall back to
+    # the per-sample loop (upd_fn / val_loss) automatically.
+    batched_loss = None
+    if hasattr(adapter, "eval_batch"):
+        val_batch = adapter.eval_batch()
+        batched_loss = jax.jit(jax.vmap(
+            lambda p: adapter.loss(p, val_batch)))
 
     X, y = generate_utility_samples(
         jax.random.PRNGKey(seed), trajectory, upd_fn,
         lambda p: adapter.val_loss(p),
         num_clients=len(adapter.clients), n_samples=n_samples, s_max=s_max,
-        clients_per_sample=clients_per_sample, seed=seed)
+        clients_per_sample=clients_per_sample, seed=seed,
+        batch_fn=lambda ci, rng_int: adapter.client_batch(
+            ci, int(rng_int), batch_size, local_steps),
+        batched_update_fn=make_batched_client_update(
+            adapter, local_steps=local_steps, lr=client_lr),
+        batched_loss_fn=batched_loss)
     reg = (RandomForestRegressor(seed=seed) if kind == "rf"
            else MLPRegressor(seed=seed))
     reg.fit(X, y)

@@ -16,7 +16,8 @@ from repro.fl.adapters import MlpFmowAdapter
 from repro.fl.simulation import run_simulation
 from repro.optim import (adamw_init, adamw_update, apply_updates,
                          clip_by_global_norm, sgd_init, sgd_update)
-from repro.ckpt.checkpoint import CheckpointStore, load_pytree, save_pytree
+from repro.ckpt.checkpoint import (CheckpointStore, DeviceCheckpointStore,
+                                   load_pytree, save_pytree)
 
 
 @pytest.fixture(scope="module")
@@ -99,6 +100,53 @@ def test_checkpoint_store_prune():
     assert 6 in st._mem and 7 in st._mem
     with pytest.raises(KeyError):
         st.get(0)
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (CheckpointStore, {"keep_in_memory": 2}),
+    (DeviceCheckpointStore, {"ring": 2}),
+])
+def test_checkpoint_store_prune_unlinks_disk_spill(tmp_path, cls, kw):
+    """Regression: prune used to leave spilled .npz files (and `_disk`
+    entries) behind forever, growing disk unboundedly on long runs."""
+    st = cls(directory=str(tmp_path), spill_every=1, **kw)
+    for v in range(10):
+        st.put(v, {"w": jnp.full((2,), float(v))})
+    assert len(list(tmp_path.glob("*.npz"))) == 10
+    st.prune(min_referenced=9)       # cutoff = newest - keep + 1 = 8
+    assert sorted(st._disk) == [8, 9]
+    assert sorted(p.name for p in tmp_path.glob("*.npz")) == \
+        ["w_000008.npz", "w_000009.npz"]
+
+
+def test_device_checkpoint_store_contract():
+    """Ring hits return device arrays with the put values; ring-evicted
+    versions spill to host and stay readable until pruned; `get_many`
+    gathers a stacked pytree; misses raise the same KeyError contract."""
+    st = DeviceCheckpointStore(ring=4)
+    for v in range(9):
+        st.put(v, {"w": jnp.full((3,), float(v)), "b": jnp.arange(2) + v})
+    assert st.versions() == list(range(9))
+    for v in range(9):                        # 5..8 in ring, 0..4 spilled
+        got = st.get(v)
+        assert isinstance(got["w"], jax.Array)
+        assert float(got["w"][0]) == v and int(got["b"][1]) == v + 1
+    stacked = st.get_many([6, 8, 5])
+    assert np.asarray(stacked["w"])[:, 0].tolist() == [6.0, 8.0, 5.0]
+    st.prune(min_referenced=7)       # cutoff = min(7, newest - ring + 1)
+    assert st.versions() == [5, 6, 7, 8]
+    with pytest.raises(KeyError):
+        st.get(4)
+
+
+def test_device_checkpoint_store_overwrites_in_place():
+    """Re-putting a version replaces the slot content (no stale host
+    copy resurfacing)."""
+    st = DeviceCheckpointStore(ring=3)
+    st.put(0, {"w": jnp.zeros(2)})
+    st.put(0, {"w": jnp.ones(2)})
+    assert float(st.get(0)["w"][0]) == 1.0
+    assert st.versions() == [0]
 
 
 # ---------------------------------------------------------------------------

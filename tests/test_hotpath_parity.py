@@ -1,18 +1,22 @@
 """Parity tests for the vectorized simulation hot paths.
 
-Strict-parity contract of the vectorization PR:
+Strict-parity contract of the vectorization PRs:
   * the structure-of-arrays numpy forest predict bit-matches the per-row
     node-walk reference;
   * the jit/JAX forest predict and featurize match to XLA reduction-order
     tolerance, and the end-to-end `fedspace_search` still selects the
     identical schedule;
-  * the batched `on_aggregate` (grouped vmapped client training, fused
-    top-k compression, kernel-routed reduction) reproduces the seed
-    engine's per-satellite-loop trajectory bit-identically;
+  * the device-resident engine (chunked jitted window scans, device
+    SatState, checkpoint ring, batched `on_aggregate`) reproduces the seed
+    host-loop engine's trajectory bit-identically — and its own per-window
+    host fallback exactly — including under the FedSpace scheduler's
+    re-planning;
   * `aggregate_params_tree` agrees between the Pallas interpreter and the
     jnp tensordot oracle, and the default off-TPU dispatch is bit-identical
     to the oracle.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -150,46 +154,115 @@ def test_infer_n_range_matches_loop_reference():
 # batched aggregation round
 
 
-class _SeedLoopEngine(SimulationEngine):
-    """`on_aggregate` transcribed from the seed engine: one jitted client
-    update per buffered satellite, per-satellite checkpoint fetch,
-    sequential compression roundtrip, stack-tensordot-add aggregation."""
+class _SeedHostEngine:
+    """The pre-refactor engine, transcribed as the parity oracle: numpy
+    protocol arrays rebuilt into a SatState every window, a host-pytree
+    CheckpointStore, one jitted client update + checkpoint fetch per
+    buffered satellite, sequential compression roundtrip, and a
+    stack-tensordot-add aggregation."""
 
-    def on_aggregate(self, i):
+    def __init__(self, C, adapter, scheduler, config):
+        self.config = dataclasses.replace(
+            config, seed=0 if config.seed is None else config.seed,
+            uplink_topk=(0.0 if config.uplink_topk is None
+                         else config.uplink_topk))
+        self.C = np.asarray(C, bool)
+        self.adapter = adapter
+        self.scheduler = scheduler
+        self.num_windows = self.C.shape[0]
+        if self.config.max_windows:
+            self.num_windows = min(self.num_windows,
+                                   self.config.max_windows)
+        self.K = self.C.shape[1]
+
+    def run(self):
+        from repro.ckpt.checkpoint import CheckpointStore
         from repro.core.staleness import staleness_compensation
+        from repro.fl.client import make_client_update
+        from repro.fl.engine import SimResult
         cfg = self.config
-        ks = np.flatnonzero(self.buffered_base >= 0)
-        stal = self.ig - self.buffered_base[ks]
-        updates = []
-        for k in ks:
-            base = self.store.get(int(self.buffered_base[k]))
-            u = self._client_update(base, int(k), round_rng=i,
-                                    batch_size=cfg.batch_size)
-            if cfg.uplink_topk > 0.0:
-                u, _ = roundtrip(u, cfg.uplink_topk)
-            updates.append(u)
-        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
-        c = staleness_compensation(jnp.asarray(stal), cfg.alpha)
-        w = c / jnp.maximum(jnp.sum(c), 1e-12) * cfg.server_lr
-        delta = jax.tree.map(
-            lambda u_: jnp.tensordot(w.astype(jnp.float32),
-                                     u_.astype(jnp.float32), axes=1), stack)
-        self.params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
-            self.params, delta)
-        self.ig += 1
-        self.store.put(self.ig, self.params)
-        refs = np.concatenate([self.pending, self.buffered_base])
-        refs = refs[refs >= 0]
-        self.store.prune(int(refs.min()) if refs.size else self.ig)
-        res = self.result
-        res.num_global_updates += 1
-        res.num_aggregated_gradients += len(ks)
-        np.add.at(res.staleness_hist, np.clip(stal, 0, cfg.s_max), 1)
-        self.buffered_base[:] = -1
-        self._emit("on_aggregate_end", i,
-                   {"ig": self.ig, "n_aggregated": len(ks),
-                    "staleness": stal.tolist()})
+        self.scheduler.reset()
+        params = self.adapter.init(jax.random.PRNGKey(cfg.seed))
+        mask = self.adapter.trainable_mask(params) \
+            if hasattr(self.adapter, "trainable_mask") else None
+        client_update = make_client_update(
+            self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
+            trainable_mask=mask)
+        store = CheckpointStore(keep_in_memory=cfg.s_max + 26)
+        store.put(0, params)
+        ig = 0
+        version = np.zeros(self.K, np.int64)
+        pending = np.zeros(self.K, np.int64)
+        buffered = np.full(self.K, -1, np.int64)
+        res = SimResult(scheme=self.scheduler.name,
+                        target_acc=cfg.target_acc)
+        res.staleness_hist = np.zeros(cfg.s_max + 1, np.int64)
+        status = float(self.adapter.val_loss(params))
+        for i in range(self.num_windows):
+            conn = self.C[i]
+            res.total_connections += int(conn.sum())
+            has_pending = conn & (pending >= 0)
+            res.idle_connections += int(
+                (conn & ~has_pending & (version == ig)).sum())
+            buffered[has_pending] = pending[has_pending]
+            pending[has_pending] = -1
+            n_buf = int((buffered >= 0).sum())
+            state = SS.SatState(jnp.asarray(version, jnp.int32),
+                                jnp.asarray(pending, jnp.int32),
+                                jnp.asarray(buffered, jnp.int32))
+            a = self.scheduler.decide(
+                i, n_in_buffer=n_buf, K=self.K, state=state, ig=ig,
+                connectivity=self.C, status=status)
+            if a and n_buf > 0:
+                ks = np.flatnonzero(buffered >= 0)
+                stal = ig - buffered[ks]
+                updates = []
+                for k in ks:
+                    base = store.get(int(buffered[k]))
+                    u = client_update(base, int(k), round_rng=i,
+                                      batch_size=cfg.batch_size)
+                    if cfg.uplink_topk > 0.0:
+                        u, _ = roundtrip(u, cfg.uplink_topk)
+                    updates.append(u)
+                stack = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+                c = staleness_compensation(jnp.asarray(stal), cfg.alpha)
+                wv = c / jnp.maximum(jnp.sum(c), 1e-12) * cfg.server_lr
+                delta = jax.tree.map(
+                    lambda u_: jnp.tensordot(wv.astype(jnp.float32),
+                                             u_.astype(jnp.float32),
+                                             axes=1), stack)
+                params = jax.tree.map(
+                    lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+                    params, delta)
+                ig += 1
+                store.put(ig, params)
+                refs = np.concatenate([pending, buffered])
+                refs = refs[refs >= 0]
+                store.prune(int(refs.min()) if refs.size else ig)
+                res.num_global_updates += 1
+                res.num_aggregated_gradients += len(ks)
+                np.add.at(res.staleness_hist, np.clip(stal, 0, cfg.s_max), 1)
+                buffered[:] = -1
+            behind = conn & (version < ig)
+            version[behind] = ig
+            pending[behind] = ig
+            res.windows_run = i + 1
+            stop = False
+            if (i + 1) % cfg.eval_every == 0 or i == self.num_windows - 1:
+                acc = self.adapter.accuracy(params)
+                status = float(self.adapter.val_loss(params))
+                res.accuracy.append(acc)
+                res.val_loss.append(status)
+                res.eval_windows.append(i)
+                if (cfg.target_acc is not None and acc >= cfg.target_acc
+                        and res.time_to_target_days is None):
+                    res.time_to_target_days = res.days(i)
+                    if cfg.stop_at_target:
+                        stop = True
+            if stop:
+                break
+        self.params = params
+        return res
 
 
 @pytest.fixture(scope="module")
@@ -204,7 +277,7 @@ def tiny_world():
 def test_batched_aggregate_bit_identical_trajectory(tiny_world):
     C, adapter = tiny_world
     cfg = dict(eval_every=16, max_windows=64)
-    ref_eng = _SeedLoopEngine(C, adapter, make_scheduler("fedbuff", M=4),
+    ref_eng = _SeedHostEngine(C, adapter, make_scheduler("fedbuff", M=4),
                               EngineConfig(**cfg))
     ref = ref_eng.run()
     new_eng = SimulationEngine(C, adapter, make_scheduler("fedbuff", M=4),
@@ -226,7 +299,7 @@ def test_batched_aggregate_with_fused_compression(tiny_world):
     noise; all integer protocol counters are exact."""
     C, adapter = tiny_world
     cfg = dict(eval_every=16, max_windows=64, uplink_topk=0.25)
-    ref_eng = _SeedLoopEngine(C, adapter, make_scheduler("fedbuff", M=4),
+    ref_eng = _SeedHostEngine(C, adapter, make_scheduler("fedbuff", M=4),
                               EngineConfig(**cfg))
     ref = ref_eng.run()
     new_eng = SimulationEngine(C, adapter, make_scheduler("fedbuff", M=4),
@@ -253,12 +326,123 @@ def test_batched_aggregate_handles_empty_shards():
     parts = iid_partition(200, K - 2, 0) + [np.array([], np.int64)] * 2
     adapter = MlpFmowAdapter(data, make_clients(parts))
     cfg = dict(eval_every=16, max_windows=32)
-    ref = _SeedLoopEngine(C, adapter, make_scheduler("async"),
+    ref = _SeedHostEngine(C, adapter, make_scheduler("async"),
                           EngineConfig(**cfg)).run()
     new = SimulationEngine(C, adapter, make_scheduler("async"),
                            EngineConfig(**cfg)).run()
     assert new.summary() == ref.summary()
     assert new.accuracy == ref.accuracy
+
+
+# ---------------------------------------------------------------------------
+# chunked fast loop vs per-window host loop
+
+
+@pytest.mark.parametrize("scheme,kw", [("async", {}), ("fedbuff", {"M": 4}),
+                                       ("periodic", {"period": 3})])
+def test_fast_loop_matches_host_loop(tiny_world, scheme, kw):
+    """The engine's two execution strategies — chunked jitted scans vs
+    per-window protocol-step calls — must produce identical results and
+    bit-identical parameters."""
+    C, adapter = tiny_world
+    cfg = dict(eval_every=16, max_windows=64)
+    fast_eng = SimulationEngine(C, adapter, make_scheduler(scheme, **kw),
+                                EngineConfig(**cfg))
+    fast = fast_eng.run()
+    assert fast_eng._fast_ok            # took the chunked path
+    host_eng = SimulationEngine(C, adapter, make_scheduler(scheme, **kw),
+                                EngineConfig(fast_loop=False, **cfg))
+    host = host_eng.run()
+    assert not host_eng._fast_ok
+    assert fast.summary() == host.summary()
+    assert fast.accuracy == host.accuracy
+    np.testing.assert_array_equal(fast_eng.version, host_eng.version)
+    np.testing.assert_array_equal(fast_eng.pending, host_eng.pending)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        fast_eng.params, host_eng.params)
+
+
+def test_fedspace_fast_loop_matches_host_loop(tiny_world):
+    """FedSpace re-plans every I0 windows from the live protocol state;
+    the chunked loop must hand `fedspace_search` the identical post-upload
+    state (and consume the scheduler rng identically), so the schedules —
+    and hence the whole trajectory — match the per-window loop exactly."""
+    from repro.core.scheduler import FedSpaceScheduler
+    C, adapter = tiny_world
+    rf = _fit_hist_forest(3)
+    cfg = dict(eval_every=8, max_windows=48)
+    fast_eng = SimulationEngine(
+        C, adapter,
+        FedSpaceScheduler(rf, I0=8, num_candidates=64, seed=11),
+        EngineConfig(**cfg))
+    fast = fast_eng.run()
+    assert fast_eng._fast_ok
+    host_eng = SimulationEngine(
+        C, adapter,
+        FedSpaceScheduler(rf, I0=8, num_candidates=64, seed=11),
+        EngineConfig(fast_loop=False, **cfg))
+    host = host_eng.run()
+    assert fast.summary() == host.summary()
+    assert fast.accuracy == host.accuracy
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        fast_eng.params, host_eng.params)
+
+
+def test_fast_loop_respects_early_stop_and_target(tiny_world):
+    """Chunk boundaries align with eval windows, so target-accuracy stops
+    fire at the same window on both strategies."""
+    C, adapter = tiny_world
+    cfg = dict(eval_every=8, max_windows=96, target_acc=0.1)
+    fast = SimulationEngine(C, adapter, make_scheduler("async"),
+                            EngineConfig(**cfg)).run()
+    host = SimulationEngine(C, adapter, make_scheduler("async"),
+                            EngineConfig(fast_loop=False, **cfg)).run()
+    assert fast.windows_run == host.windows_run
+    assert fast.time_to_target_days == host.time_to_target_days
+
+
+# ---------------------------------------------------------------------------
+# vectorized utility-sample generation (eq. 12)
+
+
+def test_vectorized_utility_samples_match_loop(tiny_world):
+    """The batched sample generator (grouped vmapped client training +
+    vmapped loss over perturbed checkpoints) shares the loop path's rng
+    stream: features — integer staleness histograms + T — are
+    bit-identical, targets agree to reduction-order tolerance."""
+    from repro.core.utility import generate_utility_samples
+    from repro.fl.client import (make_batched_client_update,
+                                 make_client_update)
+    from repro.fl.fedspace_setup import pretrain_trajectory
+    _, adapter = tiny_world
+    traj = pretrain_trajectory(adapter, rounds=6, clients_per_round=6,
+                               local_steps=2, client_lr=0.3, seed=0)
+    cu = make_client_update(adapter, local_steps=2, lr=0.3)
+
+    def upd_fn(base, ci, r):
+        return cu(base, ci, round_rng=int(r))
+
+    common = dict(num_clients=16, n_samples=24, s_max=8,
+                  clients_per_sample=8, seed=5)
+    X_loop, y_loop = generate_utility_samples(
+        jax.random.PRNGKey(0), traj, upd_fn,
+        lambda p: adapter.val_loss(p), **common)
+    val_batch = adapter.eval_batch()
+    X_vec, y_vec = generate_utility_samples(
+        jax.random.PRNGKey(0), traj, upd_fn,
+        lambda p: adapter.val_loss(p),
+        batch_fn=lambda ci, r: adapter.client_batch(ci, int(r), 32, 2),
+        batched_update_fn=make_batched_client_update(
+            adapter, local_steps=2, lr=0.3),
+        batched_loss_fn=jax.jit(jax.vmap(
+            lambda p: adapter.loss(p, val_batch))),
+        **common)
+    assert np.array_equal(X_loop, X_vec)
+    np.testing.assert_allclose(y_vec, y_loop, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,141 @@
+"""Lockstep property tests: the FL engine and the schedule-search
+simulator must traverse identical protocol state over the same random
+connectivity + schedule — the invariant the unified Algorithm-1 transition
+layer (repro.core.staleness sub-transitions) rests on. Driven through both
+engine strategies: the chunked device fast loop and the per-window host
+loop."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import staleness as SS
+from repro.core.scheduler import Scheduler
+from repro.fl.engine import EngineConfig, SimulationEngine
+
+
+class _StubAdapter:
+    """Minimal adapter: tiny model, zero-gradient loss — client training
+    is a no-op, so runs isolate the protocol dynamics."""
+
+    def __init__(self, K):
+        self.clients = list(range(K))
+
+    def init(self, key):
+        return {"w": jnp.zeros((2,))}
+
+    def loss(self, params, batch):
+        return jnp.sum(params["w"]) * 0.0 + jnp.sum(batch) * 0.0
+
+    def client_batch(self, ci, round_rng, batch_size, num_batches):
+        return jnp.zeros((num_batches, 1))
+
+    def accuracy(self, params):
+        return 0.0
+
+    def val_loss(self, params):
+        return 0.0
+
+
+def _scripted_indicator(t, n_buf, args):
+    return args[t] > 0
+
+
+class ScriptedScheduler(Scheduler):
+    """Replays a fixed schedule a^i — the engine-side mirror of feeding
+    the same `a` to `simulate_window`. `device=True` additionally offers
+    the schedule as a device plan, putting the engine on the chunked
+    fast loop."""
+    name = "scripted"
+
+    def __init__(self, a, device=True):
+        self.a = np.asarray(a, np.int32)
+        self._device = device
+
+    def decide(self, i, *, n_in_buffer, **_):
+        return bool(self.a[i]) and n_in_buffer > 0
+
+    def device_plan(self, i, **_):
+        if not self._device:
+            return None
+        return _scripted_indicator, jnp.asarray(self.a), None
+
+
+@st.composite
+def _scenario(draw):
+    K = draw(st.integers(2, 8))
+    I = draw(st.integers(4, 24))
+    C = np.array(draw(st.lists(st.lists(st.booleans(), min_size=K,
+                                        max_size=K), min_size=I,
+                               max_size=I)), bool)
+    a = np.array(draw(st.lists(st.integers(0, 1), min_size=I, max_size=I)),
+                 np.int32)
+    return C, a
+
+
+@settings(max_examples=15, deadline=None)
+@given(_scenario())
+def test_engine_steps_lockstep_with_simulator(scn):
+    """Per-window host loop vs `SS.step`, compared after EVERY window:
+    identical SatState, global version, idle count, and staleness
+    histogram."""
+    C, a = scn
+    I, K = C.shape
+    eng = SimulationEngine(C, _StubAdapter(K),
+                           ScriptedScheduler(a, device=False),
+                           EngineConfig(eval_every=I + 1, fast_loop=False))
+    eng.prepare()
+    state, ig = SS.bootstrap_state(K), jnp.int32(0)
+    idle, hist = 0, np.zeros(eng.config.s_max + 1, np.int64)
+    for i in range(I):
+        conn = C[i]
+        n_buf = eng.on_uploads(i, conn)
+        if eng.on_decide(i, n_buf) and n_buf > 0:
+            eng.on_aggregate(i)
+        eng.on_downloads(i, conn)
+        state, ig, info = SS.step(state, ig, jnp.asarray(conn),
+                                  jnp.asarray(bool(a[i])),
+                                  s_max=eng.config.s_max)
+        idle += int(info["n_idle"])
+        hist += np.asarray(info["hist"])
+        np.testing.assert_array_equal(eng.version,
+                                      np.asarray(state.version)), i
+        np.testing.assert_array_equal(eng.pending,
+                                      np.asarray(state.pending)), i
+        np.testing.assert_array_equal(eng.buffered_base,
+                                      np.asarray(state.buffered)), i
+        assert eng.ig == int(ig), i
+    assert eng.result.idle_connections == idle
+    assert eng.result.staleness_hist.tolist() == hist.tolist()
+
+
+@settings(max_examples=15, deadline=None)
+@given(_scenario())
+def test_engine_run_matches_simulate_window(scn):
+    """Full runs through both execution strategies land on exactly the
+    state/counters `simulate_window` computes for the same schedule."""
+    C, a = scn
+    I, K = C.shape
+    state, ig, infos = SS.simulate_window(
+        jnp.asarray(C), jnp.asarray(a), SS.bootstrap_state(K),
+        jnp.int32(0))
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=I + 1,
+                                            fast_loop=fast))
+        res = eng.run()
+        assert eng._fast_ok == fast
+        np.testing.assert_array_equal(eng.version,
+                                      np.asarray(state.version))
+        np.testing.assert_array_equal(eng.pending,
+                                      np.asarray(state.pending))
+        np.testing.assert_array_equal(eng.buffered_base,
+                                      np.asarray(state.buffered))
+        assert eng.ig == int(ig)
+        assert res.total_connections == int(C.sum())
+        assert res.idle_connections == \
+            int(np.asarray(infos["n_idle"]).sum())
+        assert res.num_aggregated_gradients == \
+            int(np.asarray(infos["n_aggregated"]).sum())
+        assert res.staleness_hist.tolist() == \
+            np.asarray(infos["hist"]).sum(axis=0).tolist()
