@@ -23,6 +23,15 @@ vectorized/device-resident path, with machine-readable output.
 4. **Utility sampler** (eq. 12): `generate_utility_samples` per-sample
    loop vs the vectorized path (client updates grouped by base checkpoint
    and vmapped, perturbed checkpoints evaluated in vmapped loss calls).
+5. **Search scaling** (mega-constellations): the full re-plan across the
+   constellation scenario suite — K ∈ {40, 191, 400, 1000} satellites
+   (starlink40 / flock191 / starlink400 / starlink1000 presets) x
+   R ∈ {5000, 20000} candidates. The PR-3 pipeline (per-step histogram
+   broadcast inside the vmapped scan, û over all R*I0 windows) is
+   transcribed below as the frozen reference; the current path scans
+   scatter-free int16 state emitting compact staleness marks and
+   evaluates û only at each candidate's aggregation windows. Selected
+   schedules must be identical cell by cell.
 
 Writes results to ``BENCH_hotpaths.json`` at the repo root (``--smoke``
 writes ``BENCH_hotpaths.smoke.json`` instead so CI runs never clobber the
@@ -46,7 +55,8 @@ from repro.core import staleness as SS
 from repro.core.scheduler import make_scheduler
 from repro.core.search import fedspace_search
 from repro.core.staleness import staleness_compensation
-from repro.core.utility import RandomForestRegressor, featurize
+from repro.core.utility import (RandomForestRegressor, featurize,
+                                featurize_jnp)
 from repro.data.fmow import FmowSpec, SyntheticFmow
 from repro.data.partition import iid_partition
 from repro.data.pipeline import make_clients
@@ -172,6 +182,87 @@ def bench_search(smoke: bool) -> dict:
         "speedup_warm": t_ref / t_opt_warm,
         "schedule_identical": bool(np.array_equal(sched_ref, sched_opt)),
     }
+
+
+# ---------------------------------------------------------------------------
+# 1b. search scaling across the constellation scenario suite
+
+
+def _pr3_replan(rng, C, state, ig, rf, status, *, num_candidates, s_max):
+    """The PR-3 re-plan pipeline, transcribed: full-histogram protocol
+    simulation (per-step (R, K, s_max+1) compare+reduce inside the vmapped
+    scan, int32 state) and û evaluated at every one of the R*I0 windows,
+    masked by the schedule afterwards. Candidate generation and selection
+    are shared with the current path so the comparison isolates scoring."""
+    from repro.core.search import random_candidates, select_candidate
+    I0 = C.shape[0]
+    cands = random_candidates(rng, I0, 4, 8, num_candidates)
+    cs = jnp.asarray(cands)
+    _, _, infos = SS.simulate_candidates(jnp.asarray(C), cs, state,
+                                         jnp.int32(ig), s_max=s_max,
+                                         lite=True)
+    hist = infos["hist"]                                 # (R, I0, s_max+1)
+    Rn, I0_, F = hist.shape
+    feats = featurize_jnp(hist.reshape(Rn * I0_, F), status)
+    util = rf.predict_device(feats).reshape(Rn, I0_)
+    scores = np.asarray((util * cs.astype(jnp.float32)).sum(axis=1))
+    return cands[select_candidate(cands, scores)]
+
+
+def bench_search_scaling(smoke: bool) -> dict:
+    """fedspace_search wall time over the scenario-suite grid, current
+    scatter-free path vs the transcribed PR-3 pipeline, parity-gated on
+    the selected schedule in every cell."""
+    from repro.core.connectivity import connectivity_sets, \
+        constellation_preset
+    s_max = 8
+    rf = _fit_search_regressor(s_max=s_max)
+    if smoke:
+        I0 = 8
+        rng = np.random.default_rng(0)
+        grid = [("random16", rng.random((I0, 16)) < 0.15, 64)]
+    else:
+        I0 = 24
+        presets = ["starlink40", "flock191", "starlink400", "starlink1000"]
+        grid = [(p, connectivity_sets(constellation_preset(p), days=0.25),
+                 R) for p in presets for R in (5000, 20000)]
+
+    out = {"I0": I0, "s_max": s_max, "n_trees": rf.n_trees, "cells": []}
+    for name, C, R in grid:
+        K = C.shape[1]
+        state = SS.bootstrap_state(K)
+
+        def replan_new():
+            t0 = time.perf_counter()
+            sched = fedspace_search(np.random.default_rng(7), C, state, 0,
+                                    rf, 1.0, num_candidates=R, s_max=s_max)
+            return time.perf_counter() - t0, sched
+
+        def replan_pr3():
+            t0 = time.perf_counter()
+            sched = _pr3_replan(np.random.default_rng(7), C, state, 0, rf,
+                                1.0, num_candidates=R, s_max=s_max)
+            return time.perf_counter() - t0, sched
+
+        t_new_cold, sched_new = replan_new()
+        t_new = min(replan_new()[0] for _ in range(3))
+        t_pr3_cold, sched_pr3 = replan_pr3()
+        t_pr3 = min(replan_pr3()[0] for _ in range(2))
+        cell = {
+            "preset": name, "K": K, "num_candidates": R,
+            "t_pr3_s": t_pr3,
+            "t_current_s": t_new,
+            "t_current_cold_s": t_new_cold,
+            "speedup": t_pr3 / t_new,
+            "schedule_identical": bool(np.array_equal(sched_pr3,
+                                                      sched_new)),
+        }
+        out["cells"].append(cell)
+        print(f"search_scaling {name} K={K} R={R}: pr3 {t_pr3:.3f}s, "
+              f"current {t_new:.3f}s ({cell['speedup']:.1f}x), "
+              f"schedule_identical={cell['schedule_identical']}",
+              flush=True)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -485,6 +576,7 @@ def main() -> None:
           f"optimized warm {search['t_optimized_warm_s']:.3f}s "
           f"({search['speedup_warm']:.1f}x), schedule_identical="
           f"{search['schedule_identical']}", flush=True)
+    scaling = bench_search_scaling(args.smoke)
     agg = bench_aggregation(args.smoke)
     print(f"aggregation_round: reference {agg['t_reference_s']:.3f}s, "
           f"batched {agg['t_batched_s']:.3f}s ({agg['speedup']:.1f}x), "
@@ -512,6 +604,7 @@ def main() -> None:
             "bench_wall_s": round(time.time() - t0, 2),
         },
         "search_replan": search,
+        "search_scaling": scaling,
         "aggregation_round": agg,
         "window_loop": wloop,
         "utility_sampler": usamp,
@@ -523,9 +616,10 @@ def main() -> None:
 
     window_parity = all(r["state_and_counters_identical"]
                         for r in wloop["per_K"].values())
-    if not (search["schedule_identical"] and agg["params_bit_equal"]
-            and window_parity and usamp["features_identical"]
-            and usamp["targets_close"]):
+    scaling_parity = all(c["schedule_identical"] for c in scaling["cells"])
+    if not (search["schedule_identical"] and scaling_parity
+            and agg["params_bit_equal"] and window_parity
+            and usamp["features_identical"] and usamp["targets_close"]):
         raise SystemExit("parity violation — see JSON output")
 
 

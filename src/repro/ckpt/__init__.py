@@ -1,2 +1,9 @@
+"""Checkpointing: pytree save/load on npz plus the version-indexed
+trajectory stores (`CheckpointStore` on host, `DeviceCheckpointStore` as
+a device-resident ring buffer) the FL engine and the utility estimator
+read model versions from."""
 from repro.ckpt.checkpoint import (CheckpointStore, DeviceCheckpointStore,
                                    load_pytree, save_pytree)
+
+__all__ = ["CheckpointStore", "DeviceCheckpointStore", "load_pytree",
+           "save_pytree"]

@@ -29,6 +29,8 @@ def _flatten_with_paths(tree):
 
 
 def save_pytree(path: str, tree) -> None:
+    """Save a pytree of arrays to `path` as an npz of path-keyed leaves
+    (parent directories are created; see `load_pytree` to restore)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **_flatten_with_paths(tree))
 
@@ -62,6 +64,8 @@ class CheckpointStore:
         self._like = None
 
     def put(self, version: int, params) -> None:
+        """Store `params` (a pytree) under integer `version`; spills to
+        disk as well when the version hits the `spill_every` stride."""
         self._like = params
         self._mem[version] = params
         if self.dir and self.spill_every and version % self.spill_every == 0:
@@ -89,6 +93,8 @@ class CheckpointStore:
             del self._disk[v]
 
     def get(self, version: int):
+        """Fetch the stored pytree for `version` (memory first, then the
+        disk spill). Raises KeyError for evicted/unknown versions."""
         if version in self._mem:
             return self._mem[version]
         if version in self._disk:
@@ -97,6 +103,7 @@ class CheckpointStore:
                        f"(have {sorted(self._mem)[:4]}..)")
 
     def versions(self) -> List[int]:
+        """Sorted list of every retrievable version (memory + disk)."""
         return sorted(set(self._mem) | set(self._disk))
 
 
@@ -152,6 +159,9 @@ class DeviceCheckpointStore:
         self._like = None
 
     def put(self, version: int, params) -> None:
+        """Write `params` into the ring slot for `version` (an in-place
+        donated device write); a still-retained version occupying the slot
+        is spilled to host first. Disk spill follows `spill_every`."""
         params = jax.tree.map(jnp.asarray, params)
         self._like = params
         if self._ring is None:
@@ -176,6 +186,9 @@ class DeviceCheckpointStore:
             self._disk[version] = p
 
     def get(self, version: int):
+        """Fetch `version` as device arrays: a device gather when it is
+        still in the ring, else re-upload from the host/disk spill.
+        Raises KeyError for evicted/unknown versions."""
         slot = self._ver_slot.get(version)
         if slot is not None:
             return _ring_read(self._ring, jnp.int32(slot))
@@ -218,5 +231,6 @@ class DeviceCheckpointStore:
             del self._disk[v]
 
     def versions(self) -> List[int]:
+        """Sorted list of every retrievable version (ring + spills)."""
         return sorted(set(self._ver_slot) | set(self._host)
                       | set(self._disk))

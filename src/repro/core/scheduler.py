@@ -43,13 +43,39 @@ def _fedspace_indicator(t, n_buf, args):
 
 
 class Scheduler:
+    """Aggregation-policy interface: the indicator a^i of Algorithm 1.
+
+    A scheduler answers one question per window — "aggregate now?" — via
+    `decide`, and may additionally offer `device_plan` so the engine can
+    answer it inside a jitted scan without per-window Python dispatch.
+    Schedulers are registered by name (`repro.fl.registry.SCHEDULERS`)
+    and built with `make_scheduler`.
+    """
     name = "base"
 
     def reset(self):
+        """Clear per-run state. The engine calls this once in `prepare()`;
+        stateless schedulers need not override it."""
         pass
 
     def decide(self, i: int, *, n_in_buffer: int, K: int, state: SS.SatState,
                ig: int, connectivity: np.ndarray, status: float) -> bool:
+        """The aggregation indicator a^i, asked once per window on the
+        host loop (after the window's uploads).
+
+        Args:
+          i: absolute window index.
+          n_in_buffer: GS buffer occupancy after this window's uploads.
+          K: constellation size.
+          state: the device-resident post-upload `SatState` (read-only).
+          ig: current global version.
+          connectivity: the full (num_windows, K) bool matrix — FedSpace
+            slices the *future* window from it (deterministic, eq. 2).
+          status: training status T (val loss at the last eval).
+
+        Returns True to aggregate at this window (the engine additionally
+        requires a non-empty buffer).
+        """
         raise NotImplementedError
 
     def device_plan(self, i: int, *, K: int, state: SS.SatState, ig: int,
@@ -61,7 +87,22 @@ class Scheduler:
         ``[i, i + horizon)`` (``horizon=None`` = rest of the run) without a
         per-window ``decide`` call. Return None (the default) to force the
         engine onto the per-window host loop — correct for any scheduler,
-        required for ones with per-window host state or side effects."""
+        required for ones with per-window host state or side effects.
+
+        Contract:
+          * `indicator_fn` must be a module-level (stable-identity)
+            function — it becomes a static argument of the engine's jitted
+            scan, so a fresh closure per call would recompile every chunk;
+            per-instance knobs must travel in `args` instead;
+          * `args` is an arbitrary jnp-array pytree passed through to every
+            ``indicator_fn(t, n_buf, args)`` call (traced, not static);
+          * decisions must match `decide` exactly for the same windows —
+            the two execution strategies are required to produce
+            bit-identical trajectories (tests/test_protocol_lockstep.py);
+          * the hook may do host work up front (e.g. FedSpace re-plans its
+            schedule here, simulating the boundary window's upload so the
+            search sees the same post-upload state `decide` would).
+        """
         return None
 
 

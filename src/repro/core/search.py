@@ -8,6 +8,9 @@ paper's sequential Python loop.
 """
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,36 +33,122 @@ def random_candidates(rng: np.random.Generator, I0: int, n_min: int,
     return (ranks < n_agg[:, None]).astype(np.int32)
 
 
+def event_positions(candidates: np.ndarray):
+    """Per-candidate aggregation-window indices, dense (host numpy).
+
+    Returns (idx, mask): idx (R, n_cap) int32 holds each schedule's a=1
+    window indices in increasing order (n_cap = max aggregation count over
+    the batch, at least 1), 0-padded; mask (R, n_cap) bool flags the real
+    entries. The eq.-13 objective only sums utility at a=1 windows, so the
+    scorer evaluates û at these positions instead of all I0 windows.
+    """
+    cands = np.asarray(candidates)
+    n = cands.sum(axis=1).astype(np.int64)
+    n_cap = max(int(n.max()) if n.size else 0, 1)
+    # stable argsort of (1 - a) lists the a=1 positions first, in order
+    idx = np.argsort(1 - cands, axis=1, kind="stable")[:, :n_cap]
+    mask = np.arange(n_cap)[None, :] < n[:, None]
+    return idx.astype(np.int32), mask
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def _simulate_marks(C_window, candidates, state, ig, *, s_max: int):
+    """Jitted marks-collecting candidate simulation (the eager vmapped
+    scan pays ~3x its own runtime in dispatch overhead at search shapes)."""
+    _, _, infos = SS.simulate_candidates(C_window, candidates, state, ig,
+                                         s_max=s_max, collect="marks")
+    return infos["marks"]
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def _event_features(marks, idx, status, *, s_max: int):
+    """Gather the (R, I0, K) staleness marks at each candidate's
+    aggregation windows, histogram them, and featurize: (R*n_cap, F)
+    features for the utility regressor. The one-hot reduction runs once
+    over the gathered events — n_agg of I0 windows — instead of inside the
+    per-step scan, and accumulates in int16 (exact for K < 32768)."""
+    g = jnp.take_along_axis(marks, idx[..., None], axis=1)  # (R, n_cap, K)
+    hists = SS.hist_from_marks(g, s_max=s_max, dtype=jnp.int16)
+    Rn, n_cap, F = hists.shape
+    return featurize_jnp(hists.reshape(Rn * n_cap, F), status)
+
+
+def _narrow_state(state: SS.SatState, ig: int, horizon: int):
+    """int16 copy of (state, ig) when every version the window can produce
+    fits — on CPU the narrowed vmapped scan moves half the bytes and runs
+    ~3x faster, with bit-identical marks. Falls back to int32 otherwise."""
+    if ig + horizon < np.iinfo(np.int16).max - 1:
+        dt = jnp.int16
+    else:
+        dt = jnp.int32
+    return (SS.SatState(*(x.astype(dt) for x in state)),
+            jnp.asarray(ig, dt))
+
+
 def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
                      state: SS.SatState, ig: int, regressor, status: float,
-                     *, s_max: int = 8) -> np.ndarray:
+                     *, s_max: int = 8,
+                     chunk_rows: Optional[int] = None) -> np.ndarray:
     """Predicted summed utility per candidate (eq. 13).
 
     When the regressor exposes `predict_device` (both built-in regressors
-    do), the whole pipeline — protocol simulation, featurization, regression,
-    masked reduction — stays on device; the only host transfer is the final
+    do), the whole pipeline stays on device and scatter/broadcast-free:
+    the vmapped protocol scan carries only masked `jnp.where` updates over
+    the dense per-satellite state (int16-narrowed) and emits compact
+    staleness marks; histograms, featurization, and regression run once
+    post-scan at each candidate's aggregation windows only (a=0 windows
+    contribute exactly 0 to eq. 13). The only host transfer is the final
     (R,) score vector. Regressors with only `.predict` (e.g. test oracles)
-    fall back to the host path.
+    fall back to the legacy full-histogram host path.
+
+    Args:
+      candidates: (R, I0) {0,1} schedules to score.
+      C_window: (I0, K) bool future connectivity.
+      state, ig: post-upload protocol state at the window start.
+      regressor: utility model û; `predict_device` selects the fast path.
+      status: training status T fed to the featurizer.
+      s_max: staleness clip — must match the regressor's feature width.
+      chunk_rows: candidates simulated per device batch (None = auto-sized
+        so the marks buffer stays ~64 MB); chunking only bounds memory,
+        per-candidate results are unchanged.
+
+    Returns: (R,) float32 predicted utility sums.
     """
-    cands = jnp.asarray(candidates)
-    Cw = jnp.asarray(C_window)
-    # s_max must reach the simulator so the staleness histograms match
-    # the regressor's feature width; only the histograms are consumed
-    _, _, infos = SS.simulate_candidates(Cw, cands, state, jnp.int32(ig),
-                                         s_max=s_max, lite=True)
     predict_device = getattr(regressor, "predict_device", None)
-    if predict_device is not None:
-        hist = infos["hist"]                             # (R, I0, s_max+1)
+    if predict_device is None:
+        cands = jnp.asarray(candidates)
+        Cw = jnp.asarray(C_window)
+        # s_max must reach the simulator so the staleness histograms match
+        # the regressor's feature width; only the histograms are consumed
+        _, _, infos = SS.simulate_candidates(Cw, cands, state,
+                                             jnp.int32(ig), s_max=s_max,
+                                             lite=True)
+        hist = np.asarray(infos["hist"])                 # (R, I0, s_max+1)
         Rn, I0, F = hist.shape
-        feats = featurize_jnp(hist.reshape(Rn * I0, F), status)
-        util = predict_device(feats).reshape(Rn, I0)
-        return np.asarray((util * cands.astype(jnp.float32)).sum(axis=1))
-    hist = np.asarray(infos["hist"])                     # (R, I0, s_max+1)
-    Rn, I0, F = hist.shape
-    feats = featurize(hist.reshape(Rn * I0, F), status)
-    util = regressor.predict(feats).reshape(Rn, I0)
-    agg_mask = candidates.astype(np.float32)
-    return (util * agg_mask).sum(axis=1)
+        feats = featurize(hist.reshape(Rn * I0, F), status)
+        util = regressor.predict(feats).reshape(Rn, I0)
+        agg_mask = np.asarray(candidates, np.float32)
+        return (util * agg_mask).sum(axis=1)
+
+    cands = np.asarray(candidates)
+    R, I0 = cands.shape
+    K = C_window.shape[1]
+    idx, mask = event_positions(cands)
+    Cw = jnp.asarray(np.asarray(C_window, bool))
+    st, igd = _narrow_state(state, int(ig), I0)
+    if chunk_rows is None:
+        chunk_rows = max(256, (64 << 20) // max(I0 * K, 1))
+    scores = np.empty(R, np.float32)
+    for c0 in range(0, R, chunk_rows):
+        rows = slice(c0, min(c0 + chunk_rows, R))
+        marks = _simulate_marks(Cw, jnp.asarray(cands[rows]), st, igd,
+                                s_max=s_max)
+        feats = _event_features(marks, jnp.asarray(idx[rows]),
+                                jnp.float32(status), s_max=s_max)
+        util = predict_device(feats).reshape(-1, idx.shape[1])
+        scores[rows] = np.asarray(
+            (util * jnp.asarray(mask[rows], jnp.float32)).sum(axis=1))
+    return scores
 
 
 def infer_n_range(regressor, uploads_per_window: float, I0: int,

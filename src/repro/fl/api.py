@@ -57,14 +57,40 @@ __all__ = ["ConstellationConfig", "DatasetConfig", "PartitionConfig",
 
 @dataclass
 class ConstellationConfig:
-    """Constellation + simulated horizon for the connectivity sequence."""
+    """Constellation + simulated horizon for the connectivity sequence.
+
+    Two ways to pick the constellation:
+      * ad hoc: `num_satellites` (+ `spec_overrides`) builds a single-shell
+        Planet-Flock-like spec, as before;
+      * by preset: `preset` names a registered scenario
+        (`repro.fl.registry.CONSTELLATIONS` — "flock191",
+        "starlink40/120/400/1000", ...) whose satellite count and shell
+        layout come from the registry; `num_satellites` is then ignored.
+
+    `ground` selects a named ground-station network
+    (`repro.core.connectivity.GROUND_NETWORKS`: "dense12", "mid4",
+    "sparse1") for either mode; "" keeps the spec's default. `days` sets
+    the propagated horizon (96 15-minute windows per day).
+    """
     num_satellites: int = 40
     days: float = 3.0
     spec_overrides: Dict = field(default_factory=dict)  # ConstellationSpec
+    preset: str = ""                   # CONSTELLATIONS registry key
+    ground: str = ""                   # GROUND_NETWORKS key ("" = default)
 
     def build(self):
-        spec = CN.ConstellationSpec(num_satellites=self.num_satellites,
-                                    **self.spec_overrides)
+        """Resolve to (ConstellationSpec, connectivity matrix C). Both
+        modes share `repro.core.connectivity.resolve_spec`, so `ground`
+        and `spec_overrides` have identical semantics (and error
+        messages) with and without a preset."""
+        ground = self.ground or None
+        if self.preset:
+            spec = CN.constellation_preset(self.preset, ground=ground,
+                                           **self.spec_overrides)
+        else:
+            spec = CN.resolve_spec(
+                CN.ConstellationSpec(num_satellites=self.num_satellites),
+                ground, self.spec_overrides)
         return spec, CN.connectivity_sets(spec, days=self.days)
 
 
@@ -120,6 +146,11 @@ class LinkConfig:
 
 @dataclass
 class FLExperiment:
+    """One experiment, as data: constellation x dataset x partition x
+    adapter x scheduler x training/link options, every component selected
+    by registry name. Build and run it with
+    `Federation.from_experiment(exp).run()`. `seed` is the experiment-wide
+    default that unset partition/train seeds fall back to."""
     name: str = ""
     constellation: ConstellationConfig = field(
         default_factory=ConstellationConfig)
@@ -132,6 +163,7 @@ class FLExperiment:
     seed: int = 0
 
     def describe(self) -> dict:
+        """The full experiment as a nested dict (for logs/manifests)."""
         return dataclasses.asdict(self)
 
 
@@ -179,6 +211,10 @@ class Federation:
 
     @classmethod
     def from_experiment(cls, exp: FLExperiment) -> "Federation":
+        """Wire a world from an `FLExperiment`: resolve the constellation
+        (preset or ad hoc) to connectivity, build dataset/partition/
+        clients/adapter from their registries, then the scheduler —
+        including FedSpace's phase-1 regressor when required."""
         spec, C = exp.constellation.build()
         data = SyntheticFmow(exp.dataset.to_spec())
         pseed = exp.partition.seed if exp.partition.seed is not None \
@@ -216,6 +252,16 @@ class Federation:
             return SCHEDULERS.build("fedspace", **params), diag
         return SCHEDULERS.build(cfg.kind, **cfg.params), {}
 
+    def connectivity_summary(self, *, windows_per_day: int = 96) -> dict:
+        """Scalar Fig.-2 connectivity statistics for this world's C
+        (per-window set sizes and per-satellite contacts/day; see
+        `repro.core.connectivity.connectivity_stats`). The underlying
+        per-window/per-satellite arrays are dropped so the result is
+        JSON-serializable for experiment logs."""
+        stats = CN.connectivity_stats(self.C, windows_per_day)
+        return {k: v for k, v in stats.items()
+                if k not in ("sizes", "contacts_per_day")}
+
     def with_scheduler(self, scheduler: Union[str, SchedulerConfig],
                        **params) -> "Federation":
         """Same world, different aggregation policy — for scheduler
@@ -234,6 +280,8 @@ class Federation:
 
     def engine(self, *, callbacks: Sequence = (),
                init_params=None) -> SimulationEngine:
+        """Build a ready-to-run `SimulationEngine` for this world
+        (optionally with callbacks / a custom initial model)."""
         # explicitly-set train fields win; unset (None) ones fall back to
         # the experiment-wide seed / LinkConfig compression settings
         exp = self.experiment
@@ -248,5 +296,6 @@ class Federation:
 
     def run(self, *, callbacks: Sequence = (),
             init_params=None) -> SimResult:
+        """Build the engine and execute the run; returns its SimResult."""
         return self.engine(callbacks=callbacks,
                            init_params=init_params).run()

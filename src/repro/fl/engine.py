@@ -67,7 +67,11 @@ def _upload(state, ig, conn):
 
 @functools.partial(jax.jit, static_argnames=("s_max",))
 def _aggregate_state(state, ig, *, s_max):
-    state, _, _ = SS.aggregate_step(state, ig, jnp.bool_(True), s_max=s_max)
+    # collect="none": the engine computes its own staleness bookkeeping on
+    # host in `on_aggregate`, so the per-step histogram never enters the
+    # compiled program at all
+    state, _, _ = SS.aggregate_step(state, ig, jnp.bool_(True), s_max=s_max,
+                                    collect="none")
     return state
 
 
@@ -118,6 +122,16 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, *, indicator,
 
 @dataclass
 class SimResult:
+    """Outcome of one simulated federated run.
+
+    Fields: `scheme` (scheduler name), `accuracy`/`val_loss`/
+    `eval_windows` (one entry per eval checkpoint), `staleness_hist`
+    (aggregated-gradient counts per clipped staleness),
+    `idle_connections`/`total_connections` (eq.-10 idleness accounting),
+    `num_global_updates` (aggregations), `num_aggregated_gradients`,
+    `windows_run`, and `time_to_target_days`/`target_acc` when a target
+    accuracy was set. `days(window)` converts a window index to simulated
+    days; `summary()` returns the JSON-friendly digest."""
     scheme: str
     accuracy: List[float] = field(default_factory=list)
     val_loss: List[float] = field(default_factory=list)
@@ -132,9 +146,11 @@ class SimResult:
     target_acc: Optional[float] = None
 
     def days(self, window: int) -> float:
+        """Simulated days elapsed at `window` (T0 = 15-minute windows)."""
         return window * T0_MINUTES / 60.0 / 24.0
 
     def summary(self) -> dict:
+        """JSON-friendly digest (final/best accuracy, counters, hist)."""
         return {
             "scheme": self.scheme,
             "final_acc": self.accuracy[-1] if self.accuracy else None,
@@ -180,8 +196,28 @@ class SimulationEngine:
     Protocol steps (`on_uploads`, `on_decide`, `on_aggregate`,
     `on_downloads`) are methods so scenario variants override exactly the
     step they change; callbacks observe the run without touching it.
-    Overriding any step (or a scheduler without `device_plan`) drops the
-    run onto the per-window host loop — same transitions, same trajectory.
+
+    Execution-strategy selection (both strategies are bit-identical):
+      * the chunked **fast loop** (`_scan_windows`) runs when ALL of —
+        `EngineConfig.fast_loop` is True (default), no protocol step is
+        overridden in a subclass, and `Scheduler.device_plan` returns a
+        plan for the current window;
+      * otherwise each window goes through the per-window **host loop**
+        (`_run_window`) — one `on_uploads`/`on_decide`/`on_aggregate`/
+        `on_downloads` cycle per window through the same jitted
+        transitions.
+    Fast-loop chunks are clipped to eval boundaries (where `status`
+    changes), the scheduler's plan horizon, and `_MAX_CHUNK`, then
+    bucketed to powers of two so jit compiles O(log) scan shapes.
+
+    Args:
+      C: (num_windows, K) bool connectivity matrix (tiled per
+        `EngineConfig.repeat_connectivity`).
+      adapter: model adapter (init/loss/client_batch/accuracy/val_loss).
+      scheduler: aggregation policy (`repro.core.scheduler.Scheduler`).
+      config: `EngineConfig`; keyword `overrides` replace single fields.
+      callbacks: `repro.fl.callbacks` observers.
+      init_params: optional initial global model (default: adapter.init).
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
@@ -278,6 +314,9 @@ class SimulationEngine:
         self.status = float(self.adapter.val_loss(self.params))
 
     def run(self) -> SimResult:
+        """Execute the run: `prepare()`, then advance windows under the
+        selected strategy until the horizon, a stop request, or the
+        target accuracy. Returns the populated `SimResult`."""
         self.prepare()
         try:
             self._emit("on_run_begin")

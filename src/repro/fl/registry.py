@@ -82,11 +82,19 @@ class Registry:
 SCHEDULERS = Registry("scheduler")
 ADAPTERS = Registry("adapter")
 PARTITIONS = Registry("partition")
+CONSTELLATIONS = Registry("constellation")
 
 
 def register_scheduler(name: str, obj=None):
     """Class/function decorator: register an aggregation-policy factory."""
     return SCHEDULERS.register(name, obj)
+
+
+def register_constellation(name: str, obj=None):
+    """Function decorator: register a constellation-preset factory
+    `f(*, ground=None, **overrides) -> ConstellationSpec` (see
+    `repro.core.connectivity` for the built-in scenario suite)."""
+    return CONSTELLATIONS.register(name, obj)
 
 
 def register_adapter(name: str, obj=None):

@@ -1,0 +1,121 @@
+"""Constellation scenario suite: every registered preset must build a
+valid periodic connectivity matrix (sane Fig.-2 statistics at any horizon)
+and complete a short engine run under both a fixed-rule scheduler (sync)
+and the FedSpace schedule search — i.e. any scheduler runs on any preset
+through the declarative `FLExperiment` path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import connectivity as CN
+from repro.core.utility import RandomForestRegressor, featurize
+from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
+                          Federation, FLExperiment, PartitionConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig
+from repro.fl.registry import CONSTELLATIONS
+
+PRESETS = CONSTELLATIONS.names()
+WINDOWS = 5
+
+
+def _tiny_regressor(s_max=8):
+    """Small fitted forest so FedSpace phase 2 runs without the expensive
+    phase-1 pretrain/sampling pipeline."""
+    rng = np.random.default_rng(0)
+    hists = rng.integers(0, 20, (120, s_max + 1)).astype(np.float32)
+    X = featurize(hists, 1.0)
+    y = hists.sum(1).astype(np.float32)
+    return RandomForestRegressor(n_trees=4, max_depth=3, seed=0).fit(X, y)
+
+
+@pytest.fixture(scope="module")
+def worlds():
+    """One wired Federation per preset, shared across tests (connectivity
+    propagation dominates the cost at K=1000)."""
+    cache = {}
+
+    def get(preset: str) -> Federation:
+        if preset not in cache:
+            exp = FLExperiment(
+                constellation=ConstellationConfig(preset=preset,
+                                                  days=0.125),
+                dataset=DatasetConfig(num_train=240, num_val=60),
+                partition=PartitionConfig(kind="iid"),
+                adapter=AdapterConfig(kind="mlp", params={"hidden": 8}),
+                scheduler=SchedulerConfig(kind="sync"),
+                train=EngineConfig(max_windows=WINDOWS,
+                                   eval_every=WINDOWS, local_steps=1,
+                                   batch_size=8),
+            )
+            cache[preset] = Federation.from_experiment(exp)
+        return cache[preset]
+
+    return get
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_preset_builds_valid_connectivity(worlds, preset):
+    fed = worlds(preset)
+    spec, C = fed.spec, fed.C
+    K = spec.num_satellites
+    assert C.dtype == bool
+    assert C.shape == (12, K)            # 0.125 days of 15-min windows
+    if spec.shells:
+        assert K == sum(s.num_satellites for s in spec.shells)
+
+    st = CN.connectivity_stats(C)
+    assert 0 <= st["ci_min"] <= st["ci_mean"] <= st["ci_max"] <= K
+    assert st["ci_mean"] > 0             # the constellation does connect
+    assert 0.0 <= st["nk_min"] <= st["nk_mean"] <= st["nk_max"] <= 96.0
+    assert st["sizes"].shape == (C.shape[0],)
+    assert st["contacts_per_day"].shape == (K,)
+
+    summary = fed.connectivity_summary()
+    assert set(summary) == {"ci_min", "ci_max", "ci_mean",
+                            "nk_min", "nk_max", "nk_mean"}
+    json.dumps(summary)                  # experiment-log serializable
+
+
+@pytest.mark.parametrize("scheduler", ["sync", "fedspace"])
+@pytest.mark.parametrize("preset", PRESETS)
+def test_preset_completes_engine_run(worlds, preset, scheduler):
+    fed = worlds(preset)
+    if scheduler == "fedspace":
+        fed = fed.with_scheduler(SchedulerConfig(
+            kind="fedspace",
+            params={"regressor": _tiny_regressor(), "I0": WINDOWS,
+                    "n_min": 1, "n_max": 2, "num_candidates": 16}))
+    res = fed.run()
+    assert res.windows_run == WINDOWS
+    assert res.total_connections > 0
+    assert len(res.accuracy) == 1        # the eval_every=5 checkpoint
+    if scheduler == "fedspace":
+        # the searched schedule placed 1-2 aggregations in the horizon
+        # (possibly coalesced by empty-buffer suppression, never more)
+        assert 0 <= res.num_global_updates <= 2
+
+
+def test_ground_networks_change_connectivity():
+    dense = CN.connectivity_sets(
+        CN.constellation_preset("starlink40"), days=0.125)
+    sparse = CN.connectivity_sets(
+        CN.constellation_preset("starlink40", ground="sparse1"),
+        days=0.125)
+    assert dense.sum() > sparse.sum()    # 12 stations see more than 1
+    assert CN.constellation_preset(
+        "starlink40", ground="sparse1").ground_stations == \
+        CN.GROUND_NETWORKS["sparse1"]
+
+
+def test_preset_overrides_and_errors():
+    sp = CN.constellation_preset("flock191", min_elevation_deg=30.0)
+    assert sp.min_elevation_deg == 30.0
+    with pytest.raises(KeyError, match="registered constellation"):
+        CN.constellation_preset("nope")
+    with pytest.raises(KeyError, match="ground network"):
+        CN.constellation_preset("flock191", ground="nope")
+    with pytest.raises(ValueError, match="shells sum"):
+        CN.satellite_elements(CN.ConstellationSpec(
+            num_satellites=3, shells=(CN.Shell(2, 1, 5e5, 53.0),)))
