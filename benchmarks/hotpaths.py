@@ -32,10 +32,23 @@ vectorized/device-resident path, with machine-readable output.
    scatter-free int16 state emitting compact staleness marks and
    evaluates û only at each candidate's aggregation windows. Selected
    schedules must be identical cell by cell.
+6. **Link budget** (capacity-constrained transfers): (a) the parity gate —
+   an engine run under the trivial budget (unlimited station capacity,
+   zero-latency transfers) must reproduce the geometry-only trajectory
+   bit-for-bit, and the link-gated schedule search must select the
+   identical schedule under the zero-need gate; (b) the downlink-capacity
+   study the scenario suite was built for — the same constellation over
+   `dense12` vs `sparse1` ground networks under finite rates and
+   per-station capacity, reporting idle/blocked/staleness statistics that
+   geometry-only contact models cannot distinguish.
 
-Writes results to ``BENCH_hotpaths.json`` at the repo root (``--smoke``
-writes ``BENCH_hotpaths.smoke.json`` instead so CI runs never clobber the
-committed baseline). Regenerate the baseline with:
+Every section registers itself in `SECTIONS`; the runner iterates the
+registry and fails if a registered section is missing from the report, so
+parity gates cannot rot by silent omission. Writes results to
+``BENCH_hotpaths.json`` at the repo root (``--smoke`` writes
+``BENCH_hotpaths.smoke.json`` instead so CI runs never clobber the
+committed baseline; CI uploads the smoke report as a build artifact).
+Regenerate the baseline with:
 
     PYTHONPATH=src python -m benchmarks.hotpaths
 """
@@ -65,6 +78,24 @@ from repro.fl.compression import roundtrip
 from repro.fl.engine import EngineConfig, SimulationEngine
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# section registry: the runner iterates this, so a section cannot be
+# silently dropped from the report (and with it, its parity gate)
+
+SECTIONS: dict = {}    # name -> (bench_fn, parity_fn or None)
+
+
+def section(name: str, parity=None):
+    """Register a benchmark section. `bench_fn(smoke) -> dict` produces
+    the section's report entry (and prints its own summary line);
+    `parity(result) -> bool` extracts the section's parity verdict —
+    any False fails the whole run with a nonzero exit."""
+    def deco(fn):
+        SECTIONS[name] = (fn, parity)
+        return fn
+    return deco
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +173,7 @@ def _seed_replan(rng, C, state, ig, rf, status, *, num_candidates, s_max):
     return cands[select_candidate(cands, scores)]
 
 
+@section("search_replan", parity=lambda r: r["schedule_identical"])
 def bench_search(smoke: bool) -> dict:
     K = 16 if smoke else 191          # fig.-2 constellation scale
     R = 64 if smoke else 5000         # |R| from the paper
@@ -171,6 +203,10 @@ def bench_search(smoke: bool) -> dict:
     _, sched_ref = replan_ref()
     t_ref = min(replan_ref()[0] for _ in range(3))
 
+    print(f"search_replan: reference {t_ref:.3f}s, optimized warm "
+          f"{t_opt_warm:.3f}s ({t_ref / t_opt_warm:.1f}x), "
+          f"schedule_identical="
+          f"{bool(np.array_equal(sched_ref, sched_opt))}", flush=True)
     return {
         "num_candidates": R, "I0": I0, "K": K,
         "n_trees": rf.n_trees, "max_depth": rf.max_depth,
@@ -209,6 +245,8 @@ def _pr3_replan(rng, C, state, ig, rf, status, *, num_candidates, s_max):
     return cands[select_candidate(cands, scores)]
 
 
+@section("search_scaling",
+         parity=lambda r: all(c["schedule_identical"] for c in r["cells"]))
 def bench_search_scaling(smoke: bool) -> dict:
     """fedspace_search wall time over the scenario-suite grid, current
     scatter-free path vs the transcribed PR-3 pipeline, parity-gated on
@@ -314,6 +352,7 @@ def _block(params):
                  if hasattr(x, "block_until_ready") else x, params)
 
 
+@section("aggregation_round", parity=lambda r: r["params_bit_equal"])
 def bench_aggregation(smoke: bool) -> dict:
     K = 8 if smoke else 191           # buffered satellites per round
     num_train = 400 if smoke else 7640
@@ -356,6 +395,9 @@ def bench_aggregation(smoke: bool) -> dict:
 
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
         eng.params))
+    print(f"aggregation_round: reference {t_ref:.3f}s, batched "
+          f"{t_opt:.3f}s ({t_ref / t_opt:.1f}x), params_bit_equal="
+          f"{bool(bit_equal)}", flush=True)
     return {
         "n_buffered": K, "n_base_versions": n_versions,
         "model_params": n_params, "local_steps": eng.config.local_steps,
@@ -428,6 +470,9 @@ def _seed_window_loop(C, num_windows, decide, *, s_max=8):
             "total": total, "idle": idle, "n_agg": n_agg, "hist": hist}
 
 
+@section("window_loop",
+         parity=lambda r: all(c["state_and_counters_identical"]
+                              for c in r["per_K"].values()))
 def bench_window_loop(smoke: bool) -> dict:
     Ks = [16] if smoke else [34, 191, 1000]
     W = 64 if smoke else 2048
@@ -488,6 +533,9 @@ def bench_window_loop(smoke: bool) -> dict:
             "speedup": t_seed / t_dev,
             "state_and_counters_identical": bool(parity),
         }
+        print(f"window_loop K={K}: seed {W / t_seed:.0f} win/s, device "
+              f"{W / t_dev:.0f} win/s ({t_seed / t_dev:.1f}x), parity="
+              f"{bool(parity)}", flush=True)
     return out
 
 
@@ -495,6 +543,8 @@ def bench_window_loop(smoke: bool) -> dict:
 # 4. utility sampler
 
 
+@section("utility_sampler",
+         parity=lambda r: r["features_identical"] and r["targets_close"])
 def bench_utility_sampler(smoke: bool) -> dict:
     from repro.core.utility import generate_utility_samples
     from repro.fl.client import (make_batched_client_update,
@@ -538,6 +588,10 @@ def bench_utility_sampler(smoke: bool) -> dict:
     t_vec = min(run(vec_kw)[0] for _ in range(2))
     t_loop, Xl, yl = run({})
     t_loop = min(t_loop, run({})[0])
+    print(f"utility_sampler: loop {t_loop:.3f}s, vectorized {t_vec:.3f}s "
+          f"({t_loop / t_vec:.1f}x), features_identical="
+          f"{bool(np.array_equal(Xl, Xv))}, targets_close="
+          f"{bool(np.allclose(yl, yv, atol=1e-5))}", flush=True)
     return {
         "n_samples": n_samples, "clients_per_sample": cps,
         "num_clients": K, "local_steps": local_steps,
@@ -548,6 +602,137 @@ def bench_utility_sampler(smoke: bool) -> dict:
         "features_identical": bool(np.array_equal(Xl, Xv)),
         "targets_max_abs_diff": float(np.abs(yl - yv).max()),
         "targets_close": bool(np.allclose(yl, yv, atol=1e-5)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 6. link budget: trivial-budget parity gate + the downlink-capacity study
+
+
+def _protocol_run(C, budget, *, M, windows, eval_every=None):
+    """One protocol-isolated engine run (NullAdapter, fedbuff M); returns
+    (engine, result, wall seconds)."""
+    K = C.shape[1]
+    eng = SimulationEngine(
+        C, _NullAdapter(K), make_scheduler("fedbuff", M=M),
+        EngineConfig(eval_every=eval_every or windows, max_windows=windows),
+        link_budget=budget)
+    t0 = time.perf_counter()
+    res = eng.run()
+    return eng, res, time.perf_counter() - t0
+
+
+def _capacity_cell(spec, *, days, windows, link_kw, M):
+    """Run one ground-network cell of the capacity study and digest the
+    idle/blocked/staleness statistics."""
+    from repro.core.connectivity import link_budget
+    budget = link_budget(spec, days=days, **link_kw)
+    eng, res, t = _protocol_run(budget.served, budget, M=M,
+                                windows=windows)
+    hist = res.staleness_hist
+    n_agg = int(hist.sum())
+    return {
+        "stations": len(spec.ground_stations),
+        "visible_contacts": int(budget.visible[:windows].sum()),
+        "served_contacts": int(budget.served[:windows].sum()),
+        "blocked_fraction": float(
+            (budget.visible[:windows] & ~budget.served[:windows]).sum()
+            / max(budget.visible[:windows].sum(), 1)),
+        "idle_fraction": res.idle_connections
+        / max(res.total_connections, 1),
+        "global_updates": res.num_global_updates,
+        "aggregated_gradients": res.num_aggregated_gradients,
+        "mean_staleness": float((hist * np.arange(len(hist))).sum()
+                                / max(n_agg, 1)),
+        "t_run_s": t,
+    }
+
+
+@section("link_budget",
+         parity=lambda r: r["trivial_trajectory_identical"]
+         and r["trivial_schedule_identical"] and r["capacity_stats_differ"])
+def bench_link_budget(smoke: bool) -> dict:
+    """(a) Parity gate: the trivial budget — unlimited station capacity,
+    zero-latency transfers — must reproduce the geometry-only engine
+    trajectory and the geometry-only search schedule bit-for-bit (the
+    contract every link-budget code path is gated on). (b) Capacity
+    study: identical constellation and protocol over dense12 vs sparse1
+    ground networks under finite rates and per-station capacity — the
+    idle/blocked/staleness statistics must differ measurably, which is
+    exactly what the geometry-only contact model could not show."""
+    from repro.core.connectivity import (ConstellationSpec, link_budget,
+                                         resolve_spec, transfer_windows)
+    K = 16 if smoke else 191
+    days = 0.25 if smoke else 1.0
+    windows = int(days * 96)
+    # smoke: a wide 10-deg visibility cone + capacity 1, so even 16
+    # satellites over a quarter day produce real shared-station contention
+    base = ConstellationSpec() if not smoke \
+        else ConstellationSpec(num_satellites=K, min_elevation_deg=10.0)
+    capacity = 2 if not smoke else 1
+    M = max(2, K // 8)
+
+    # (a) trivial-budget parity: same trajectory, bit for bit
+    trivial = link_budget(base, days=days)    # all sentinels: gates nothing
+    C = trivial.visible
+    e0, r0, t_geom = _protocol_run(C, None, M=M, windows=windows,
+                                   eval_every=windows // 2)
+    e1, r1, t_gated = _protocol_run(C, trivial, M=M, windows=windows,
+                                    eval_every=windows // 2)
+    traj_ok = (
+        np.array_equal(e0.version, e1.version)
+        and np.array_equal(e0.pending, e1.pending)
+        and np.array_equal(e0.buffered_base, e1.buffered_base)
+        and e0.ig == e1.ig
+        and r0.total_connections == r1.total_connections
+        and r0.idle_connections == r1.idle_connections
+        and r0.staleness_hist.tolist() == r1.staleness_hist.tolist())
+
+    rf = _fit_search_regressor()
+    I0 = 8 if smoke else 24
+    Cw = C[:I0]
+    R = 64 if smoke else 5000
+    sched0 = fedspace_search(np.random.default_rng(7), Cw,
+                             SS.bootstrap_state(K), 0, rf, 1.0,
+                             num_candidates=R, s_max=8)
+    gate = SS.LinkGate((np.ones_like(Cw, np.int32) * Cw), 0, 0)
+    sched1 = fedspace_search(np.random.default_rng(7), Cw,
+                             SS.bootstrap_state(K, progress=True), 0, rf,
+                             1.0, num_candidates=R, s_max=8, link=gate)
+    sched_ok = bool(np.array_equal(sched0, sched1))
+
+    # (b) capacity study: dense12 vs sparse1, finite rates + station caps
+    link_kw = dict(uplink_mbps=20.0, downlink_mbps=100.0, model_mb=600.0,
+                   gs_capacity=capacity)
+    cells = {g: _capacity_cell(resolve_spec(base, g, None), days=days,
+                               windows=windows, link_kw=link_kw, M=M)
+             for g in ("dense12", "sparse1")}
+    d12, sp1 = cells["dense12"], cells["sparse1"]
+    stats_differ = bool(
+        sp1["blocked_fraction"] > d12["blocked_fraction"]
+        and sp1["aggregated_gradients"] < d12["aggregated_gradients"])
+
+    print(f"link_budget: trivial gate {t_gated:.3f}s vs geometry "
+          f"{t_geom:.3f}s, trajectory_identical={traj_ok}, "
+          f"schedule_identical={sched_ok}", flush=True)
+    for g, c in cells.items():
+        print(f"link_budget {g}: blocked {c['blocked_fraction']:.2f}, "
+              f"idle {c['idle_fraction']:.2f}, "
+              f"agg_gradients {c['aggregated_gradients']}, "
+              f"mean_staleness {c['mean_staleness']:.2f}", flush=True)
+    return {
+        "K": K, "windows": windows,
+        "need_up": transfer_windows(link_kw["uplink_mbps"],
+                                    link_kw["model_mb"]),
+        "need_dn": transfer_windows(link_kw["downlink_mbps"],
+                                    link_kw["model_mb"]),
+        "gs_capacity": link_kw["gs_capacity"],
+        "t_geometry_run_s": t_geom,
+        "t_trivial_gated_run_s": t_gated,
+        "trivial_trajectory_identical": bool(traj_ok),
+        "trivial_schedule_identical": sched_ok,
+        "capacity_cells": cells,
+        "capacity_stats_differ": stats_differ,
     }
 
 
@@ -571,56 +756,34 @@ def main() -> None:
     t0 = time.time()
     print(f"# hot-path benchmark (smoke={args.smoke}) on "
           f"{jax.default_backend()}", flush=True)
-    search = bench_search(args.smoke)
-    print(f"search_replan: reference {search['t_reference_s']:.3f}s, "
-          f"optimized warm {search['t_optimized_warm_s']:.3f}s "
-          f"({search['speedup_warm']:.1f}x), schedule_identical="
-          f"{search['schedule_identical']}", flush=True)
-    scaling = bench_search_scaling(args.smoke)
-    agg = bench_aggregation(args.smoke)
-    print(f"aggregation_round: reference {agg['t_reference_s']:.3f}s, "
-          f"batched {agg['t_batched_s']:.3f}s ({agg['speedup']:.1f}x), "
-          f"params_bit_equal={agg['params_bit_equal']}", flush=True)
-    wloop = bench_window_loop(args.smoke)
-    for K, r in wloop["per_K"].items():
-        print(f"window_loop K={K}: seed {r['windows_per_s_seed']:.0f} "
-              f"win/s, device {r['windows_per_s_device']:.0f} win/s "
-              f"({r['speedup']:.1f}x), parity="
-              f"{r['state_and_counters_identical']}", flush=True)
-    usamp = bench_utility_sampler(args.smoke)
-    print(f"utility_sampler: loop {usamp['t_loop_s']:.3f}s, vectorized "
-          f"{usamp['t_vectorized_s']:.3f}s ({usamp['speedup']:.1f}x), "
-          f"features_identical={usamp['features_identical']}, "
-          f"targets_close={usamp['targets_close']}", flush=True)
+    result = {"meta": {
+        "smoke": args.smoke,
+        "date": time.strftime("%Y-%m-%d"),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+    }}
+    for name, (fn, _) in SECTIONS.items():
+        result[name] = fn(args.smoke)
+    result["meta"]["bench_wall_s"] = round(time.time() - t0, 2)
 
-    result = {
-        "meta": {
-            "smoke": args.smoke,
-            "date": time.strftime("%Y-%m-%d"),
-            "platform": platform.platform(),
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "backend": jax.default_backend(),
-            "bench_wall_s": round(time.time() - t0, 2),
-        },
-        "search_replan": search,
-        "search_scaling": scaling,
-        "aggregation_round": agg,
-        "window_loop": wloop,
-        "utility_sampler": usamp,
-    }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
     print(f"# wrote {out_path} ({result['meta']['bench_wall_s']}s total)")
 
-    window_parity = all(r["state_and_counters_identical"]
-                        for r in wloop["per_K"].values())
-    scaling_parity = all(c["schedule_identical"] for c in scaling["cells"])
-    if not (search["schedule_identical"] and scaling_parity
-            and agg["params_bit_equal"] and window_parity
-            and usamp["features_identical"] and usamp["targets_close"]):
-        raise SystemExit("parity violation — see JSON output")
+    # registered sections cannot rot by omission: every one must have
+    # produced a report entry, and every parity verdict must hold
+    missing = [n for n in SECTIONS
+               if n not in result or result[n] is None]
+    if missing:
+        raise SystemExit(f"benchmark sections silently skipped: {missing}")
+    violations = [n for n, (_, parity) in SECTIONS.items()
+                  if parity is not None and not parity(result[n])]
+    if violations:
+        raise SystemExit(f"parity violation in {violations} — see JSON "
+                         f"output")
 
 
 if __name__ == "__main__":

@@ -59,7 +59,8 @@ class Scheduler:
         pass
 
     def decide(self, i: int, *, n_in_buffer: int, K: int, state: SS.SatState,
-               ig: int, connectivity: np.ndarray, status: float) -> bool:
+               ig: int, connectivity: np.ndarray, status: float,
+               link=None) -> bool:
         """The aggregation indicator a^i, asked once per window on the
         host loop (after the window's uploads).
 
@@ -71,7 +72,14 @@ class Scheduler:
           ig: current global version.
           connectivity: the full (num_windows, K) bool matrix — FedSpace
             slices the *future* window from it (deterministic, eq. 2).
+            Under a link budget this is the *effective* capacity-resolved
+            matrix, so schedule searches see what transfers can actually
+            complete, not raw visibility.
           status: training status T (val loss at the last eval).
+          link: run-level `repro.core.staleness.LinkGate` (grant
+            (num_windows, K) host array + unit needs) when the engine
+            models link budgets, else None. Schedulers that simulate the
+            future (FedSpace) must gate their simulation with it.
 
         Returns True to aggregate at this window (the engine additionally
         requires a non-empty buffer).
@@ -79,7 +87,7 @@ class Scheduler:
         raise NotImplementedError
 
     def device_plan(self, i: int, *, K: int, state: SS.SatState, ig: int,
-                    connectivity: np.ndarray, status: float):
+                    connectivity: np.ndarray, status: float, link=None):
         """Fast-path hook for the device-resident engine: return
         ``(indicator_fn, args, horizon)`` where ``indicator_fn(t, n_buf,
         args) -> bool`` is jnp-traceable and decides a^t (t absolute window
@@ -102,6 +110,10 @@ class Scheduler:
           * the hook may do host work up front (e.g. FedSpace re-plans its
             schedule here, simulating the boundary window's upload so the
             search sees the same post-upload state `decide` would).
+
+        `link` mirrors the `decide` kwarg (run-level LinkGate or None);
+        the returned indicator itself needs no gating — the engine's scan
+        applies the gate inside the shared upload/download transitions.
         """
         return None
 
@@ -185,10 +197,52 @@ class FedSpaceScheduler(Scheduler):
         self._schedule: Optional[np.ndarray] = None
         self._window_start = -1
 
-    def _ensure_schedule(self, i, *, state, ig, connectivity, status):
+    def _window_link(self, link, i):
+        """Slice the run-level link gate to the planning window [i, i+I0),
+        zero-padding the horizon tail like the connectivity slice."""
+        if link is None:
+            return None
+        Gw = np.asarray(link.grant)[i:i + self.I0]
+        if Gw.shape[0] < self.I0:
+            Gw = np.concatenate(
+                [Gw, np.zeros((self.I0 - Gw.shape[0], Gw.shape[1]),
+                              Gw.dtype)], axis=0)
+        return SS.LinkGate(Gw, link.need_up, link.need_dn)
+
+    @staticmethod
+    def _search_state(state, i, *, connectivity, link):
+        """Invert window i's already-applied upload-grant accumulation.
+
+        The search receives the *post-upload* state at window i (that is
+        what `decide` sees) and its rollout re-simulates window i from the
+        top, including the upload phase. Without link gating that re-run
+        is idempotent — every connected pending update already left for
+        the buffer, so the upload mask is empty. With gating it is not:
+        a mid-upload satellite keeps `pending` and its `progress` already
+        holds window i's grant, so the rollout would add the same grant a
+        second time and predict every in-flight upload one grant ahead of
+        what the engine will execute. Subtracting the grant from exactly
+        the still-in-flight uploaders (connected & pending — completed
+        uploads reset progress and drop pending, so they are excluded by
+        construction) makes re-applying `upload_step` reproduce the
+        engine's state bit-for-bit."""
+        if link is None or state.progress is None:
+            return state
+        conn = jnp.asarray(np.asarray(connectivity[i], bool))
+        grant = jnp.asarray(np.asarray(link.grant[i]),
+                            state.progress.dtype)
+        undo = jnp.where(conn & (state.pending >= 0), grant, 0)
+        return state._replace(progress=state.progress - undo)
+
+    def _ensure_schedule(self, i, *, state, ig, connectivity, status,
+                         link=None):
         """(Re-)plan at I0 boundaries (eq. 13). `state` must be the
         post-upload state at window i — that is what `decide` receives from
-        the engine, and what the search's simulator assumes."""
+        the engine, and what the search's simulator assumes. Under a link
+        budget, `connectivity` is the effective matrix and the search's
+        protocol rollouts are gated by the same per-window grants the
+        engine will apply, so FedSpace schedules against transfers that can
+        actually complete."""
         if self._schedule is not None and \
                 (i % self.I0 != 0 or self._window_start == i):
             return
@@ -206,28 +260,37 @@ class FedSpaceScheduler(Scheduler):
             n_min = n_min if n_min is not None else inf_min
             n_max = n_max if n_max is not None else inf_max
         self._schedule = fedspace_search(
-            self._rng, Cw, state, ig, self.regressor, status,
-            n_min=n_min, n_max=n_max,
-            num_candidates=self.num_candidates, s_max=self.s_max)
+            self._rng, Cw,
+            self._search_state(state, i, connectivity=connectivity,
+                               link=link),
+            ig, self.regressor, status, n_min=n_min, n_max=n_max,
+            num_candidates=self.num_candidates, s_max=self.s_max,
+            link=self._window_link(link, i))
         self._window_start = i
 
     def decide(self, i, *, n_in_buffer, K, state, ig, connectivity, status,
-               **_):
+               link=None, **_):
         self._ensure_schedule(i, state=state, ig=ig,
-                              connectivity=connectivity, status=status)
+                              connectivity=connectivity, status=status,
+                              link=link)
         a = bool(self._schedule[i - self._window_start])
         return a and n_in_buffer > 0
 
-    def device_plan(self, i, *, K, state, ig, connectivity, status, **_):
+    def device_plan(self, i, *, K, state, ig, connectivity, status,
+                    link=None, **_):
         if i % self.I0 == 0 or self._schedule is None:
             # `decide` runs after the engine's upload step; replicate that
             # here so the search scores the identical post-upload state
             # (the scan recomputes this upload — one extra dispatch per
             # re-plan, amortized over I0 windows)
             conn = jnp.asarray(np.asarray(connectivity[i], bool))
-            state, _ = SS.upload_step(state, jnp.int32(ig), conn)
+            gate = None if link is None else SS.LinkGate(
+                jnp.asarray(np.asarray(link.grant[i]), jnp.int32),
+                jnp.int32(link.need_up), jnp.int32(link.need_dn))
+            state, _ = SS.upload_step(state, jnp.int32(ig), conn, gate)
             self._ensure_schedule(i, state=state, ig=ig,
-                                  connectivity=connectivity, status=status)
+                                  connectivity=connectivity, status=status,
+                                  link=link)
         args = (jnp.asarray(self._schedule, jnp.int32),
                 jnp.int32(self._window_start))
         return _fedspace_indicator, args, \

@@ -52,11 +52,14 @@ def event_positions(candidates: np.ndarray):
 
 
 @functools.partial(jax.jit, static_argnames=("s_max",))
-def _simulate_marks(C_window, candidates, state, ig, *, s_max: int):
+def _simulate_marks(C_window, candidates, state, ig, link, *, s_max: int):
     """Jitted marks-collecting candidate simulation (the eager vmapped
-    scan pays ~3x its own runtime in dispatch overhead at search shapes)."""
+    scan pays ~3x its own runtime in dispatch overhead at search shapes).
+    `link` is an optional device `LinkGate` (grant (I0, K)) so candidates
+    are scored against transfer-gated effective connectivity."""
     _, _, infos = SS.simulate_candidates(C_window, candidates, state, ig,
-                                         s_max=s_max, collect="marks")
+                                         s_max=s_max, collect="marks",
+                                         link=link)
     return infos["marks"]
 
 
@@ -76,19 +79,21 @@ def _event_features(marks, idx, status, *, s_max: int):
 def _narrow_state(state: SS.SatState, ig: int, horizon: int):
     """int16 copy of (state, ig) when every version the window can produce
     fits — on CPU the narrowed vmapped scan moves half the bytes and runs
-    ~3x faster, with bit-identical marks. Falls back to int32 otherwise."""
+    ~3x faster, with bit-identical marks. Falls back to int32 otherwise.
+    The `progress` column (if attached) stays int32: its arithmetic only
+    meets the int32 grant/need scalars, never the version fields."""
     if ig + horizon < np.iinfo(np.int16).max - 1:
         dt = jnp.int16
     else:
         dt = jnp.int32
-    return (SS.SatState(*(x.astype(dt) for x in state)),
+    return (SS.SatState(*(x.astype(dt) for x in state[:3]), state.progress),
             jnp.asarray(ig, dt))
 
 
 def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
                      state: SS.SatState, ig: int, regressor, status: float,
-                     *, s_max: int = 8,
-                     chunk_rows: Optional[int] = None) -> np.ndarray:
+                     *, s_max: int = 8, chunk_rows: Optional[int] = None,
+                     link: Optional[SS.LinkGate] = None) -> np.ndarray:
     """Predicted summed utility per candidate (eq. 13).
 
     When the regressor exposes `predict_device` (both built-in regressors
@@ -111,9 +116,16 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
       chunk_rows: candidates simulated per device batch (None = auto-sized
         so the marks buffer stays ~64 MB); chunking only bounds memory,
         per-candidate results are unchanged.
+      link: optional `LinkGate` (grant (I0, K), any array-like) gating the
+        simulated transfers, so candidates are scored against effective —
+        capacity-constrained — connectivity rather than raw visibility;
+        `state.progress` must be attached when given.
 
     Returns: (R,) float32 predicted utility sums.
     """
+    if link is not None:
+        link = SS.LinkGate(jnp.asarray(np.asarray(link.grant), jnp.int32),
+                           jnp.int32(link.need_up), jnp.int32(link.need_dn))
     predict_device = getattr(regressor, "predict_device", None)
     if predict_device is None:
         cands = jnp.asarray(candidates)
@@ -122,7 +134,7 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
         # the regressor's feature width; only the histograms are consumed
         _, _, infos = SS.simulate_candidates(Cw, cands, state,
                                              jnp.int32(ig), s_max=s_max,
-                                             lite=True)
+                                             lite=True, link=link)
         hist = np.asarray(infos["hist"])                 # (R, I0, s_max+1)
         Rn, I0, F = hist.shape
         feats = featurize(hist.reshape(Rn * I0, F), status)
@@ -142,7 +154,7 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
     for c0 in range(0, R, chunk_rows):
         rows = slice(c0, min(c0 + chunk_rows, R))
         marks = _simulate_marks(Cw, jnp.asarray(cands[rows]), st, igd,
-                                s_max=s_max)
+                                link, s_max=s_max)
         feats = _event_features(marks, jnp.asarray(idx[rows]),
                                 jnp.float32(status), s_max=s_max)
         util = predict_device(feats).reshape(-1, idx.shape[1])
@@ -181,11 +193,12 @@ def infer_n_range(regressor, uploads_per_window: float, I0: int,
 def fedspace_search(rng: np.random.Generator, C_window: np.ndarray,
                     state: SS.SatState, ig: int, regressor, status: float,
                     *, n_min: int = 4, n_max: int = 8, num_candidates: int
-                    = 5000, s_max: int = 8) -> np.ndarray:
+                    = 5000, s_max: int = 8,
+                    link: Optional[SS.LinkGate] = None) -> np.ndarray:
     I0 = C_window.shape[0]
     cands = random_candidates(rng, I0, n_min, n_max, num_candidates)
     scores = score_candidates(cands, C_window, state, ig, regressor, status,
-                              s_max=s_max)
+                              s_max=s_max, link=link)
     return cands[select_candidate(cands, scores)]
 
 

@@ -30,23 +30,64 @@ def staleness_compensation(s, alpha: float = 0.5):
 
 
 class SatState(NamedTuple):
-    """Per-satellite protocol state. Arrays of shape (..., K)."""
+    """Per-satellite protocol state. Arrays of shape (..., K).
+
+    `progress` is the in-progress-transfer column of the link-budget layer:
+    contact units accumulated toward the satellite's current transfer (the
+    pending upload while one exists, the model download otherwise). It is
+    ``None`` — an empty pytree node, invisible to jit/scan/vmap — unless the
+    run models finite link budgets (see `LinkGate`), so geometry-only
+    callers keep the exact three-column state of previous releases."""
     version: jnp.ndarray     # last global version received (-1 = never)
     pending: jnp.ndarray     # base version of trained-but-unsent update (-1)
     buffered: jnp.ndarray    # base version of update sitting in GS buffer (-1)
+    progress: Optional[jnp.ndarray] = None  # in-progress transfer units
 
 
-def init_state(K: int) -> SatState:
+class LinkGate(NamedTuple):
+    """Link-budget gating for `upload_step` / `download_step`.
+
+    `grant` holds the contact units (visible propagation substeps at the
+    contention-assigned ground station — see
+    `repro.core.connectivity.link_budget`) each satellite is granted:
+    shape (K,) for a single transition, (I0, K) scanned along the window
+    axis inside `simulate_window`, or the full (num_windows, K) matrix when
+    the engine hands a run-level budget to a scheduler. `need_up` /
+    `need_dn` are the units required to complete an upload / download
+    (scalars; 0 = instantaneous, which reproduces the geometry-only
+    protocol bit-identically). A transfer completes only in a window where
+    the accumulated `SatState.progress` plus this window's grant reaches
+    the threshold; progress persists across non-contact windows, so
+    transfers span multiple contact windows when grants are short.
+
+    Accounting is full-duplex at window granularity: the uplink and
+    downlink are separate channels sharing the same contact time, so a
+    window whose grant completes an upload contributes its full grant to
+    the download that starts in the same window (that is also what makes
+    zero needs reproduce the instantaneous both-directions-per-contact
+    geometry semantics bit-for-bit); surplus upload units beyond
+    `need_up` are otherwise discarded, not carried over."""
+    grant: jnp.ndarray
+    need_up: jnp.ndarray
+    need_dn: jnp.ndarray
+
+
+def init_state(K: int, *, progress: bool = False) -> SatState:
     m1 = jnp.full((K,), -1, jnp.int32)
-    return SatState(version=m1, pending=m1, buffered=m1)
+    return SatState(version=m1, pending=m1, buffered=m1,
+                    progress=jnp.zeros((K,), jnp.int32) if progress
+                    else None)
 
 
-def bootstrap_state(K: int) -> SatState:
+def bootstrap_state(K: int, *, progress: bool = False) -> SatState:
     """All satellites already hold version 0 and have a pending update on it
-    (the GS seeds the constellation with w^0)."""
+    (the GS seeds the constellation with w^0). `progress=True` attaches the
+    zeroed in-progress-transfer column for link-budget runs."""
     return SatState(version=jnp.zeros((K,), jnp.int32),
                     pending=jnp.zeros((K,), jnp.int32),
-                    buffered=jnp.full((K,), -1, jnp.int32))
+                    buffered=jnp.full((K,), -1, jnp.int32),
+                    progress=jnp.zeros((K,), jnp.int32) if progress
+                    else None)
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +97,8 @@ def bootstrap_state(K: int) -> SatState:
 # both layers share one transition semantics by construction.
 
 
-def upload_step(state: SatState, ig, connected):
+def upload_step(state: SatState, ig, connected, link: Optional[LinkGate]
+                = None):
     """Phase 1 of a time index: connected satellites hand their pending
     update to the GS buffer; idle contacts (eq. 10) are counted.
 
@@ -64,14 +106,31 @@ def upload_step(state: SatState, ig, connected):
     gathers/scatters — and dtype-preserving, so int16-narrowed search
     states stay narrow through the vmapped scan.
 
+    `link` (a per-window `LinkGate`, grant shape (..., K)) activates
+    transfer gating: a connected satellite with a pending update
+    accumulates this window's grant into `SatState.progress` and the
+    upload enters the buffer only once progress reaches `need_up`
+    (progress then resets for the next transfer). `link=None` — or a gate
+    with `need_up == 0` — reproduces the instantaneous-upload semantics
+    bit-for-bit. `connected` is the *effective* (capacity-resolved)
+    connectivity when link budgets are modeled, so the idle/connected
+    counters then count served contacts.
+
     Returns (new_state, info) with masks/counters on device:
       uploads (K,) bool, idle (K,) bool,
       n_connected, n_idle, n_buffered — scalar int32.
     """
     has_pending = state.pending >= 0
-    uploads = connected & has_pending
+    active = connected & has_pending
+    if link is None:
+        uploads = active
+        progress = state.progress
+    else:
+        progress = state.progress + jnp.where(active, link.grant, 0)
+        uploads = active & (progress >= link.need_up)
+        progress = jnp.where(uploads, 0, progress)
     buffered = jnp.where(uploads, state.pending, state.buffered)
-    pending = jnp.where(uploads, -1, state.pending)
+    pending = jnp.where(uploads, _m1(state.pending), state.pending)
 
     # idle: connected, nothing to send, nothing new to fetch (eq. 10)
     idle = connected & (~has_pending) & (state.version == ig)
@@ -79,7 +138,7 @@ def upload_step(state: SatState, ig, connected):
             "n_connected": jnp.sum(connected.astype(jnp.int32)),
             "n_idle": jnp.sum(idle.astype(jnp.int32)),
             "n_buffered": jnp.sum((buffered >= 0).astype(jnp.int32))}
-    return SatState(state.version, pending, buffered), info
+    return SatState(state.version, pending, buffered, progress), info
 
 
 def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
@@ -111,7 +170,8 @@ def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
     aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
     new_ig = ig + aggregate.astype(jnp.asarray(ig).dtype)
     buffered = jnp.where(aggregate, _m1(state.buffered), state.buffered)
-    new_state = SatState(state.version, state.pending, buffered)
+    new_state = SatState(state.version, state.pending, buffered,
+                         state.progress)
     if collect == "none":
         return new_state, new_ig, {}
     counted = in_buffer & aggregate
@@ -170,44 +230,67 @@ def hist_from_marks(marks, *, s_max: int, dtype=jnp.int32):
     return jnp.sum(part, axis=-1, dtype=dtype)
 
 
-def download_step(state: SatState, ig, connected):
+def download_step(state: SatState, ig, connected, link: Optional[LinkGate]
+                  = None):
     """Phase 3: connected satellites fetch the current global model and, if
     it is newer than what they last received, start a fresh local round.
 
     Masked `jnp.where` updates only, dtype-preserving (pass `ig` in the
     state's dtype to keep narrowed states narrow).
 
+    `link` activates transfer gating: a behind-version satellite with no
+    un-uploaded pending update (the uplink drains first — satellites finish
+    pushing the trained round before pulling the new model, which is also
+    what makes one `progress` column sufficient) accumulates this window's
+    grant and receives the model only once progress reaches `need_dn`.
+    Downloads always deliver the *current* global version: an in-flight
+    download re-targets the newest model if `ig` advances mid-transfer,
+    without resetting progress. `link=None` or `need_dn == 0` is the
+    instantaneous path, bit-for-bit.
+
     Returns (new_state, info) with the download mask on device.
     """
     gets_new = connected & (state.version < ig)
-    version = jnp.where(gets_new, ig, state.version)
-    pending = jnp.where(gets_new, ig, state.pending)
-    return SatState(version, pending, state.buffered), \
-        {"downloads": gets_new}
+    if link is None:
+        done = gets_new
+        progress = state.progress
+    else:
+        active = gets_new & (state.pending < 0)
+        progress = state.progress + jnp.where(active, link.grant, 0)
+        done = active & (progress >= link.need_dn)
+        progress = jnp.where(done, 0, progress)
+    version = jnp.where(done, ig, state.version)
+    pending = jnp.where(done, ig, state.pending)
+    return SatState(version, pending, state.buffered, progress), \
+        {"downloads": done}
 
 
 def step(state: SatState, ig, connected, aggregate, *, s_max: int,
-         collect: str = "hist"):
+         collect: str = "hist", link: Optional[LinkGate] = None):
     """One time index of the protocol: upload ∘ aggregate ∘ download.
 
     Args:
       state: SatState (K,); any signed-int dtype (dtype-preserving).
       ig: scalar global round index (same dtype as the state arrays)
-      connected: (K,) bool — C_i
+      connected: (K,) bool — C_i (the capacity-resolved effective
+        connectivity when link budgets are modeled)
       aggregate: scalar bool — a^i
       s_max: staleness histogram clip
       collect: diagnostics to emit — ``"hist"`` (default, the full PR-3
         info dict), ``"marks"`` (compact per-satellite staleness marks; see
         `aggregate_step`), or ``"none"``.
+      link: optional per-window `LinkGate` (grant (K,)) gating uploads and
+        downloads on accumulated transfer progress; None = instantaneous
+        transfers (bit-identical to every previous release).
 
     Returns: (new_state, new_ig, info) where info (collect="hist") has:
       hist: (s_max+1,) counts of aggregated gradients per clipped staleness
       n_aggregated, n_idle, max_staleness (only meaningful when aggregate)
     """
-    state, up = upload_step(state, ig, connected)
+    state, up = upload_step(state, ig, connected, link)
     state, new_ig, agg = aggregate_step(state, ig, aggregate, s_max=s_max,
                                         collect=collect)
-    state, _ = download_step(state, new_ig, connected)
+    state, _ = download_step(state, new_ig, connected, link)
     if collect != "hist":
         return state, new_ig, agg
     info = {"hist": agg["hist"], "n_aggregated": agg["n_aggregated"],
@@ -216,13 +299,16 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int,
 
 
 def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
-                    lite: bool = False, collect: Optional[str] = None):
+                    lite: bool = False, collect: Optional[str] = None,
+                    link: Optional[LinkGate] = None):
     """Roll the protocol over a scheduling window.
 
     Args:
-      C_window: (I0, K) bool future connectivity (deterministic!)
+      C_window: (I0, K) bool future connectivity (deterministic!) — the
+        effective, capacity-resolved matrix when link budgets are modeled
       a: (I0,) {0,1} candidate aggregation schedule
-      state, ig: protocol state at window start
+      state, ig: protocol state at window start (`state.progress` must be
+        attached when `link` is given)
       lite: emit only the staleness histograms — the scalar diagnostics
         (n_idle, n_aggregated, max_staleness) become dead outputs and XLA
         eliminates their per-step reductions, which is measurably faster
@@ -231,6 +317,8 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
         ``"marks"`` (infos carry only marks (I0, K): the scatter-free
         search path, recovered into histograms by `hist_from_marks`), or
         ``"none"`` (state/ig only, infos empty).
+      link: optional `LinkGate` whose grant is (I0, K) — row i gates the
+        transfers of window i; scanned alongside C_window.
 
     Returns (final_state, final_ig, infos) with infos stacked over I0:
       hist (I0, s_max+1) and, unless lite, n_aggregated (I0,), ... — or
@@ -243,26 +331,33 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
     else:
         emit = lambda info: info
 
+    grants = () if link is None else (link.grant,)
+
     def body(carry, inp):
         st, g = carry
-        c, ai = inp
+        c, ai = inp[0], inp[1]
+        gate = None if link is None \
+            else LinkGate(inp[2], link.need_up, link.need_dn)
         st, g, info = step(st, g, c, ai.astype(bool), s_max=s_max,
-                           collect=collect)
+                           collect=collect, link=gate)
         return (st, g), emit(info)
 
     (state, ig), infos = jax.lax.scan(
-        body, (state, ig), (C_window, a.astype(jnp.int32)))
+        body, (state, ig), (C_window, a.astype(jnp.int32)) + grants)
     return state, ig, infos
 
 
 # vmap over candidate schedules: a (R, I0) -> infos stacked over R.
 def simulate_candidates(C_window, candidates, state: SatState, ig, *,
                         s_max: int = 8, lite: bool = False,
-                        collect: Optional[str] = None):
-    """`simulate_window` vmapped over candidate schedules (axis 0)."""
+                        collect: Optional[str] = None,
+                        link: Optional[LinkGate] = None):
+    """`simulate_window` vmapped over candidate schedules (axis 0). The
+    link gate (when given) is shared by every candidate — schedules differ
+    in *when* they aggregate, not in the physics of the links."""
     return jax.vmap(lambda a: simulate_window(C_window, a, state, ig,
                                               s_max=s_max, lite=lite,
-                                              collect=collect)
+                                              collect=collect, link=link)
                     )(candidates)
 
 

@@ -78,19 +78,22 @@ class ConstellationConfig:
     preset: str = ""                   # CONSTELLATIONS registry key
     ground: str = ""                   # GROUND_NETWORKS key ("" = default)
 
-    def build(self):
-        """Resolve to (ConstellationSpec, connectivity matrix C). Both
-        modes share `repro.core.connectivity.resolve_spec`, so `ground`
-        and `spec_overrides` have identical semantics (and error
+    def build_spec(self):
+        """Resolve to the `ConstellationSpec` alone (no propagation).
+        Both modes share `repro.core.connectivity.resolve_spec`, so
+        `ground` and `spec_overrides` have identical semantics (and error
         messages) with and without a preset."""
         ground = self.ground or None
         if self.preset:
-            spec = CN.constellation_preset(self.preset, ground=ground,
+            return CN.constellation_preset(self.preset, ground=ground,
                                            **self.spec_overrides)
-        else:
-            spec = CN.resolve_spec(
-                CN.ConstellationSpec(num_satellites=self.num_satellites),
-                ground, self.spec_overrides)
+        return CN.resolve_spec(
+            CN.ConstellationSpec(num_satellites=self.num_satellites),
+            ground, self.spec_overrides)
+
+    def build(self):
+        """Resolve to (ConstellationSpec, connectivity matrix C)."""
+        spec = self.build_spec()
         return spec, CN.connectivity_sets(spec, days=self.days)
 
 
@@ -135,9 +138,35 @@ class SchedulerConfig:
 
 @dataclass
 class LinkConfig:
-    """Satellite-to-GS link model options (compression today; bandwidth /
-    loss models are future scenario PRs)."""
+    """Satellite-to-GS link model options: uplink compression plus the
+    capacity-constrained link budget (rates, model size, per-station
+    concurrent-contact capacity).
+
+    Every budget field uses 0 as its "unconstrained" sentinel, so the
+    default LinkConfig is the geometry-only model of previous releases —
+    a contact window is a free, instantaneous transfer — bit-for-bit.
+    Setting `model_mb` together with a rate makes transfers span
+    ``ceil(model_mb * 8 / rate_mbps / substep)`` contact substeps
+    (`repro.core.connectivity.transfer_windows`), and `gs_capacity`
+    bounds how many satellites one ground station serves concurrently
+    (surplus contacts are deterministically turned away —
+    `repro.core.connectivity.resolve_contention`). The `Federation`
+    builder resolves non-trivial configs into a
+    `repro.core.connectivity.LinkBudget` consumed by the engine, the
+    schedulers, and the eq.-13 schedule search."""
     uplink_topk: float = 0.0      # >0: top-k+int8 compressed uplink
+    uplink_mbps: float = 0.0      # sat->GS rate; 0 = unconstrained
+    downlink_mbps: float = 0.0    # GS->sat rate; 0 = unconstrained
+    model_mb: float = 0.0         # model transfer size; 0 = instantaneous
+    gs_capacity: int = 0          # concurrent contacts/station; 0 = no cap
+
+    @property
+    def constrained(self) -> bool:
+        """True when any field makes links non-instantaneous or contended
+        — i.e. the experiment needs a resolved `LinkBudget`."""
+        return (self.gs_capacity > 0
+                or (self.model_mb > 0
+                    and (self.uplink_mbps > 0 or self.downlink_mbps > 0)))
 
 
 # --------------------------------------------------------------------------
@@ -194,6 +223,7 @@ class Federation:
     def __init__(self, *, experiment: FLExperiment, spec, C: np.ndarray,
                  data, adapter, scheduler=None,
                  scheduler_diag: Optional[dict] = None,
+                 link_budget=None,
                  _regressor_cache: Optional[Dict] = None):
         self.experiment = experiment
         self.spec = spec
@@ -202,6 +232,9 @@ class Federation:
         self.adapter = adapter
         self.scheduler = scheduler
         self.scheduler_diag = scheduler_diag or {}
+        # resolved LinkBudget when the experiment's LinkConfig is
+        # capacity/rate-constrained (None = geometry-only links)
+        self.link_budget = link_budget
         # FedSpace phase-1 (regressor, diag) keyed by setup knobs, shared
         # across with_scheduler clones of this world
         self._regressor_cache: Dict = ({} if _regressor_cache is None
@@ -214,8 +247,23 @@ class Federation:
         """Wire a world from an `FLExperiment`: resolve the constellation
         (preset or ad hoc) to connectivity, build dataset/partition/
         clients/adapter from their registries, then the scheduler —
-        including FedSpace's phase-1 regressor when required."""
-        spec, C = exp.constellation.build()
+        including FedSpace's phase-1 regressor when required. A
+        rate/capacity-constrained `LinkConfig` is instead resolved to the
+        `LinkBudget` transfer layer over the same spec and horizon, and C
+        comes from its `visible` matrix — bit-identical to
+        `connectivity_sets` (tests/test_link_budget.py), so the orbital
+        propagation sweep runs once, not twice."""
+        budget = None
+        if exp.link.constrained:
+            spec = exp.constellation.build_spec()
+            lk = exp.link
+            budget = CN.link_budget(
+                spec, days=exp.constellation.days,
+                uplink_mbps=lk.uplink_mbps, downlink_mbps=lk.downlink_mbps,
+                model_mb=lk.model_mb, gs_capacity=lk.gs_capacity)
+            C = budget.visible
+        else:
+            spec, C = exp.constellation.build()
         data = SyntheticFmow(exp.dataset.to_spec())
         pseed = exp.partition.seed if exp.partition.seed is not None \
             else exp.seed
@@ -226,7 +274,7 @@ class Federation:
         adapter = ADAPTERS.build(exp.adapter.kind, data,
                                  make_clients(parts), **exp.adapter.params)
         fed = cls(experiment=exp, spec=spec, C=C, data=data,
-                  adapter=adapter)
+                  adapter=adapter, link_budget=budget)
         fed.scheduler, diag = fed._build_scheduler(exp)
         fed.scheduler_diag = diag
         return fed
@@ -272,6 +320,7 @@ class Federation:
         exp = dataclasses.replace(self.experiment, scheduler=cfg)
         fed = Federation(experiment=exp, spec=self.spec, C=self.C,
                          data=self.data, adapter=self.adapter,
+                         link_budget=self.link_budget,
                          _regressor_cache=self._regressor_cache)
         fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
         return fed
@@ -292,7 +341,8 @@ class Federation:
         cfg = dataclasses.replace(cfg, seed=seed, uplink_topk=topk)
         return SimulationEngine(self.C, self.adapter, self.scheduler, cfg,
                                 callbacks=callbacks,
-                                init_params=init_params)
+                                init_params=init_params,
+                                link_budget=self.link_budget)
 
     def run(self, *, callbacks: Sequence = (),
             init_params=None) -> SimResult:

@@ -24,6 +24,12 @@ Two execution strategies, same trajectory bit-for-bit:
     `on_downloads` calls through the same transitions, taken automatically
     for subclassed steps or schedulers without a device plan.
 
+Finite link budgets (`repro.core.connectivity.LinkBudget`, built by the
+`Federation` layer from `LinkConfig`) slot into the same transitions: the
+engine then runs on capacity-resolved effective connectivity and gates
+every upload/download on accumulated per-window transfer grants, under
+both execution strategies.
+
 Subclass and override a step to model protocol variants (ISL propagation,
 sink satellites, lossy links); attach `repro.fl.callbacks.Callback`s for
 cross-cutting concerns (metric streaming, checkpointing, early stop).
@@ -59,8 +65,8 @@ _MAX_CHUNK = 128
 
 
 @jax.jit
-def _upload(state, ig, conn):
-    state, info = SS.upload_step(state, ig, conn)
+def _upload(state, ig, conn, gate):
+    state, info = SS.upload_step(state, ig, conn, gate)
     return state, jnp.stack([info["n_connected"], info["n_idle"],
                              info["n_buffered"]])
 
@@ -76,8 +82,8 @@ def _aggregate_state(state, ig, *, s_max):
 
 
 @jax.jit
-def _download(state, ig, conn):
-    state, _ = SS.download_step(state, ig, conn)
+def _download(state, ig, conn, gate):
+    state, _ = SS.download_step(state, ig, conn, gate)
     return state
 
 
@@ -86,8 +92,8 @@ def _tree_where(pred, a, b):
 
 
 @functools.partial(jax.jit, static_argnames=("indicator", "horizon"))
-def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, *, indicator,
-                  horizon):
+def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev, *,
+                  indicator, horizon):
     """Advance the protocol over up to `horizon` windows starting at
     absolute window i0, freezing at the first window whose aggregation
     indicator fires (post-upload, pre-aggregation — the engine trains and
@@ -95,28 +101,40 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, *, indicator,
     aggregation happens inside the scan. Windows at offset >= n_valid are
     padding (bucketed horizon) and leave the state untouched.
 
+    `link_dev` is None (instantaneous transfers) or ``(G_dev, need_up,
+    need_dn)`` — the padded device grants matrix plus unit needs — in which
+    case the scanned upload/download transitions are gated per window
+    through the shared `repro.core.staleness.LinkGate` semantics.
+
     Returns (state, counters (horizon, 4) int32) with per-window
     [n_connected, n_idle, n_buffered, a]; counter rows after the event row
     are garbage the caller must ignore.
     """
     Cw = jax.lax.dynamic_slice_in_dim(C_dev, i0, horizon, axis=0)
     ts = i0 + jnp.arange(horizon)
+    if link_dev is None:
+        xs = (ts, Cw)
+    else:
+        G_dev, need_up, need_dn = link_dev
+        xs = (ts, Cw,
+              jax.lax.dynamic_slice_in_dim(G_dev, i0, horizon, axis=0))
 
     def body(carry, inp):
         st, done = carry
-        t, conn = inp
+        t, conn = inp[0], inp[1]
+        gate = None if link_dev is None \
+            else SS.LinkGate(inp[2], need_up, need_dn)
         live = (~done) & (t - i0 < n_valid)
-        up_st, info = SS.upload_step(st, ig, conn)
+        up_st, info = SS.upload_step(st, ig, conn, gate)
         n_buf = info["n_buffered"]
         a = live & indicator(t, n_buf, ind_args) & (n_buf > 0)
-        dl_st, _ = SS.download_step(up_st, ig, conn)
+        dl_st, _ = SS.download_step(up_st, ig, conn, gate)
         nxt = _tree_where(live, _tree_where(a, up_st, dl_st), st)
         counters = jnp.stack([info["n_connected"], info["n_idle"], n_buf,
                               a.astype(jnp.int32)])
         return (nxt, done | a), counters
 
-    (state, _), counters = jax.lax.scan(body, (state, jnp.bool_(False)),
-                                        (ts, Cw))
+    (state, _), counters = jax.lax.scan(body, (state, jnp.bool_(False)), xs)
     return state, counters
 
 
@@ -218,11 +236,20 @@ class SimulationEngine:
       config: `EngineConfig`; keyword `overrides` replace single fields.
       callbacks: `repro.fl.callbacks` observers.
       init_params: optional initial global model (default: adapter.init).
+      link_budget: optional `repro.core.connectivity.LinkBudget`. When
+        given, the engine runs on its capacity-resolved `served` matrix
+        (the `C` argument is replaced — schedulers then plan against
+        effective connectivity), satellites carry the in-progress-transfer
+        column, and every upload/download is gated on accumulated contact
+        units through the shared `LinkGate` transitions — in the fast loop
+        and the host loop alike. A trivial budget (unlimited capacity,
+        zero needs) is bit-identical to `link_budget=None`.
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
                  config: Optional[EngineConfig] = None, *,
-                 callbacks: Sequence = (), init_params=None, **overrides):
+                 callbacks: Sequence = (), init_params=None,
+                 link_budget=None, **overrides):
         cfg = config if config is not None else EngineConfig()
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
@@ -231,13 +258,21 @@ class SimulationEngine:
             uplink_topk=(0.0 if cfg.uplink_topk is None
                          else cfg.uplink_topk))
         self.config = cfg
+        self.link_budget = link_budget
+        grants = None
+        if link_budget is not None:
+            C = link_budget.served
+            grants = np.asarray(link_budget.grants, np.int32)
         repeat = cfg.repeat_connectivity
         if repeat == 0:    # auto: tile C up to the requested horizon
             need = cfg.max_windows or C.shape[0]
             repeat = max(1, -(-int(need) // C.shape[0]))
         if repeat > 1:
             C = np.concatenate([C] * repeat, axis=0)
+            if grants is not None:
+                grants = np.concatenate([grants] * repeat, axis=0)
         self.C = np.asarray(C, bool)
+        self._grants = grants
         self.adapter = adapter
         self.scheduler = scheduler
         self.callbacks = list(callbacks)
@@ -272,6 +307,13 @@ class SimulationEngine:
         """Host mirror of the GS buffer's per-satellite base versions."""
         return np.asarray(self.state.buffered)
 
+    @property
+    def transfer_progress(self):
+        """Host mirror of per-satellite in-progress transfer units (None
+        unless the run models a link budget)."""
+        return None if self.state.progress is None \
+            else np.asarray(self.state.progress)
+
     def prepare(self) -> None:
         """Initialize run state (model, client-update programs, checkpoint
         ring, device-resident protocol state). `run` calls this; benchmarks
@@ -295,18 +337,36 @@ class SimulationEngine:
         self.store = DeviceCheckpointStore(ring=cfg.s_max + 26)
         self.store.put(0, self.params)
         self.ig = 0
-        # every satellite holds w^0 with a pending round on it (Alg. 1 init)
-        self.state = SS.bootstrap_state(self.K)
+        # every satellite holds w^0 with a pending round on it (Alg. 1
+        # init); link-budget runs carry the in-progress-transfer column
+        linked = self.link_budget is not None
+        self.state = SS.bootstrap_state(self.K, progress=linked)
+        if linked:
+            b = self.link_budget
+            self._need_up = jnp.int32(b.need_up)
+            self._need_dn = jnp.int32(b.need_dn)
+            # run-level gate handed to schedulers (host grants view)
+            self._link = SS.LinkGate(self._grants, int(b.need_up),
+                                     int(b.need_dn))
+        else:
+            self._link = None
         self._fast_ok = cfg.fast_loop and all(
             getattr(type(self), m) is getattr(SimulationEngine, m)
             for m in ("on_uploads", "on_decide", "on_aggregate",
                       "on_downloads"))
-        # device copy of the run's connectivity, padded with _MAX_CHUNK
-        # all-false rows so a bucketed scan slice never clamps
+        # device copy of the run's connectivity (and grants), padded with
+        # _MAX_CHUNK all-false/zero rows so a bucketed scan slice never
+        # clamps
         self._C_dev = jnp.asarray(np.concatenate(
             [self.C[:self.num_windows],
              np.zeros((_MAX_CHUNK, self.K), bool)])) \
             if self._fast_ok else None
+        self._link_dev = None
+        if self._fast_ok and linked:
+            G_dev = jnp.asarray(np.concatenate(
+                [self._grants[:self.num_windows],
+                 np.zeros((_MAX_CHUNK, self.K), np.int32)]))
+            self._link_dev = (G_dev, self._need_up, self._need_dn)
 
         self.result = SimResult(scheme=self.scheduler.name,
                                 target_acc=cfg.target_acc)
@@ -356,13 +416,20 @@ class SimulationEngine:
 
     # --------------------------------------------------- chunked fast loop
 
+    def _gate(self, i: int):
+        """Device `LinkGate` for window i (None when no link budget)."""
+        if self._link is None:
+            return None
+        return SS.LinkGate(jnp.asarray(self._grants[i]), self._need_up,
+                           self._need_dn)
+
     def _fast_chunk_plan(self, i: int):
         """Ask the scheduler for a device-side indicator valid from window
         i; clip the chunk to eval boundaries (where `status` changes) and
         the scan-size bucket cap. Returns (indicator, args, end) or None."""
         plan = self.scheduler.device_plan(
             i, K=self.K, state=self.state, ig=self.ig, connectivity=self.C,
-            status=self.status)
+            status=self.status, link=self._link)
         if plan is None:
             return None
         fn, args, horizon = plan
@@ -384,7 +451,8 @@ class SimulationEngine:
             bucket = 1 << (H - 1).bit_length()
             self.state, counters = _scan_windows(
                 self.state, jnp.int32(self.ig), self._C_dev, jnp.int32(w),
-                jnp.int32(H), args, indicator=fn, horizon=bucket)
+                jnp.int32(H), args, self._link_dev, indicator=fn,
+                horizon=bucket)
             counters = np.asarray(counters)
             advanced = H
             for j in range(H):
@@ -417,7 +485,7 @@ class SimulationEngine:
         res = self.result
         self.state, counters = _upload(
             self.state, jnp.int32(self.ig),
-            jnp.asarray(np.asarray(conn, bool)))
+            jnp.asarray(np.asarray(conn, bool)), self._gate(i))
         n_conn, n_idle, n_buf = (int(x) for x in np.asarray(counters))
         res.total_connections += n_conn
         res.idle_connections += n_idle
@@ -429,7 +497,7 @@ class SimulationEngine:
         host-array rebuild."""
         return self.scheduler.decide(
             i, n_in_buffer=n_buf, K=self.K, state=self.state, ig=self.ig,
-            connectivity=self.C, status=self.status)
+            connectivity=self.C, status=self.status, link=self._link)
 
     def on_aggregate(self, i: int) -> None:
         """Apply the staleness-compensated buffered update (eq. 4).
@@ -541,9 +609,12 @@ class SimulationEngine:
 
     def on_downloads(self, i: int, conn: np.ndarray) -> None:
         """Connected satellites fetch the current global model and start a
-        fresh local round on it (shared `download_step` transition)."""
+        fresh local round on it (shared `download_step` transition),
+        link-gated on accumulated downlink progress when a budget is
+        modeled."""
         self.state = _download(self.state, jnp.int32(self.ig),
-                               jnp.asarray(np.asarray(conn, bool)))
+                               jnp.asarray(np.asarray(conn, bool)),
+                               self._gate(i))
 
     # --------------------------------------------------------------- eval
 

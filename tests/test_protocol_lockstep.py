@@ -3,12 +3,15 @@ simulator must traverse identical protocol state over the same random
 connectivity + schedule — the invariant the unified Algorithm-1 transition
 layer (repro.core.staleness sub-transitions) rests on. Driven through both
 engine strategies: the chunked device fast loop and the per-window host
-loop."""
+loop — with and without link-budget transfer gating, and with the
+trivial (infinite-capacity / zero-latency) budget required to be
+bit-identical to the geometry-only path."""
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import staleness as SS
+from repro.core.connectivity import LinkBudget
 from repro.core.scheduler import Scheduler
 from repro.fl.engine import EngineConfig, SimulationEngine
 
@@ -72,6 +75,28 @@ def _scenario(draw):
     return C, a
 
 
+@st.composite
+def _linked_scenario(draw):
+    """A scenario plus a finite link budget: random per-window grants and
+    small unit needs, so transfers span several contact windows."""
+    C, a = draw(_scenario())
+    I, K = C.shape
+    grants = np.array(draw(st.lists(st.lists(st.integers(1, 3), min_size=K,
+                                             max_size=K), min_size=I,
+                                    max_size=I)), np.int32) * C
+    need_up = draw(st.integers(0, 4))
+    need_dn = draw(st.integers(0, 4))
+    return C, a, grants, need_up, need_dn
+
+
+def _budget(C, grants, need_up, need_dn):
+    """Synthetic LinkBudget over an already-resolved connectivity matrix
+    (contention folded into `grants`/`C` by construction)."""
+    return LinkBudget(visible=C, served=C,
+                      assign=np.where(C, 0, -1).astype(np.int32),
+                      grants=grants, need_up=need_up, need_dn=need_dn)
+
+
 @settings(max_examples=15, deadline=None)
 @given(_scenario())
 def test_engine_steps_lockstep_with_simulator(scn):
@@ -131,6 +156,79 @@ def test_engine_run_matches_simulate_window(scn):
                                       np.asarray(state.pending))
         np.testing.assert_array_equal(eng.buffered_base,
                                       np.asarray(state.buffered))
+        assert eng.ig == int(ig)
+        assert res.total_connections == int(C.sum())
+        assert res.idle_connections == \
+            int(np.asarray(infos["n_idle"]).sum())
+        assert res.num_aggregated_gradients == \
+            int(np.asarray(infos["n_aggregated"]).sum())
+        assert res.staleness_hist.tolist() == \
+            np.asarray(infos["hist"]).sum(axis=0).tolist()
+
+
+def _run_engine(C, a, *, fast, budget=None, **cfg):
+    I, K = C.shape
+    eng = SimulationEngine(C, _StubAdapter(K),
+                           ScriptedScheduler(a, device=fast),
+                           EngineConfig(eval_every=I + 1, fast_loop=fast,
+                                        **cfg),
+                           link_budget=budget)
+    res = eng.run()
+    assert eng._fast_ok == fast
+    return eng, res
+
+
+@settings(max_examples=15, deadline=None)
+@given(_scenario())
+def test_trivial_link_budget_is_bit_identical(scn):
+    """The infinite-capacity / zero-latency budget (served == C, needs 0)
+    must reproduce the geometry-only engine trajectory bit-for-bit under
+    BOTH execution strategies — the parity the whole link-budget layer is
+    gated on."""
+    C, a = scn
+    grants = np.ones(C.shape, np.int32) * C
+    ref, ref_res = _run_engine(C, a, fast=True)
+    for fast in (True, False):
+        eng, res = _run_engine(C, a, fast=fast,
+                               budget=_budget(C, grants, 0, 0))
+        np.testing.assert_array_equal(eng.version, ref.version)
+        np.testing.assert_array_equal(eng.pending, ref.pending)
+        np.testing.assert_array_equal(eng.buffered_base, ref.buffered_base)
+        assert eng.ig == ref.ig
+        assert res.total_connections == ref_res.total_connections
+        assert res.idle_connections == ref_res.idle_connections
+        assert res.num_aggregated_gradients == \
+            ref_res.num_aggregated_gradients
+        assert res.staleness_hist.tolist() == \
+            ref_res.staleness_hist.tolist()
+        assert eng.transfer_progress.max() == 0   # nothing ever in flight
+
+
+@settings(max_examples=15, deadline=None)
+@given(_linked_scenario())
+def test_linked_engine_run_matches_simulate_window(scn):
+    """Under a finite link budget, full engine runs through both
+    strategies land exactly on the state/counters the link-gated
+    `simulate_window` computes — the invariant that lets the eq.-13 search
+    score candidates against effective connectivity."""
+    C, a, grants, need_up, need_dn = scn
+    I, K = C.shape
+    gate = SS.LinkGate(jnp.asarray(grants), jnp.int32(need_up),
+                       jnp.int32(need_dn))
+    state, ig, infos = SS.simulate_window(
+        jnp.asarray(C), jnp.asarray(a),
+        SS.bootstrap_state(K, progress=True), jnp.int32(0), link=gate)
+    for fast in (True, False):
+        eng, res = _run_engine(C, a, fast=fast,
+                               budget=_budget(C, grants, need_up, need_dn))
+        np.testing.assert_array_equal(eng.version,
+                                      np.asarray(state.version))
+        np.testing.assert_array_equal(eng.pending,
+                                      np.asarray(state.pending))
+        np.testing.assert_array_equal(eng.buffered_base,
+                                      np.asarray(state.buffered))
+        np.testing.assert_array_equal(eng.transfer_progress,
+                                      np.asarray(state.progress))
         assert eng.ig == int(ig)
         assert res.total_connections == int(C.sum())
         assert res.idle_connections == \
