@@ -1,35 +1,41 @@
 """Scheduler comparison (paper Figs. 6-7 in miniature): one declarative
-64-satellite world, every registered policy raced over it via
-`Federation.with_scheduler` — constellation, data, and adapter built once
-and shared across all runs.
+preset world, every registered policy raced over it via
+`Federation.with_scheduler` — constellation, data, adapter, and the ISL
+topology built once and shared across all runs. The experiment carries an
+`ISLConfig`, which only the ISL-aware policies (`intra_plane`,
+`isl_async`) act on — the ground-only schedulers run the unmodified
+protocol on the very same world, so the comparison is apples-to-apples.
 
     PYTHONPATH=src python examples/scheduler_comparison.py
 """
 import time
 
 from repro.fl.api import (AdapterConfig, ConstellationConfig, DatasetConfig,
-                          FLExperiment, Federation, PartitionConfig,
-                          SchedulerConfig)
+                          FLExperiment, Federation, ISLConfig,
+                          PartitionConfig, SchedulerConfig)
 from repro.fl.engine import EngineConfig
 
 
 def main():
     exp = FLExperiment(
         name="scheduler_comparison",
-        constellation=ConstellationConfig(num_satellites=64, days=4.0),
+        constellation=ConstellationConfig(preset="starlink40", days=4.0),
         dataset=DatasetConfig(num_train=6000, num_val=1200, noise=2.2),
         partition=PartitionConfig(kind="noniid"),
         adapter=AdapterConfig(kind="mlp", params={"hidden": 48}),
         scheduler=SchedulerConfig(kind="sync"),
         train=EngineConfig(local_steps=16, client_lr=1.0, eval_every=24,
                            max_windows=384),
+        isl=ISLConfig(isl_mbps=100.0, model_mb=600.0, epoch=24),
     )
     base = Federation.from_experiment(exp)
     scheds = [
         SchedulerConfig("sync"),
         SchedulerConfig("async"),
-        SchedulerConfig("fedbuff", params={"M": 32}),
+        SchedulerConfig("fedbuff", params={"M": 20}),
         SchedulerConfig("periodic", params={"period": 4}),
+        SchedulerConfig("intra_plane"),
+        SchedulerConfig("isl_async"),
         SchedulerConfig("fedspace",
                         params={"I0": 24, "n_min": 4, "n_max": 8,
                                 "num_candidates": 800},
@@ -40,14 +46,14 @@ def main():
     # build every policy first (FedSpace phase 1 runs here) so the timed
     # loop below compares simulation time only
     feds = [base.with_scheduler(cfg) for cfg in scheds]
-    print(f"{'scheme':10s} {'final':>6s} {'best':>6s} {'upd':>5s} "
-          f"{'idle':>10s}  staleness histogram (0..8+)")
+    print(f"{'scheme':12s} {'final':>6s} {'best':>6s} {'upd':>5s} "
+          f"{'idle':>11s}  staleness histogram (0..8+)")
     for fed in feds:
         t0 = time.time()
         res = fed.run()
-        print(f"{res.scheme:10s} {res.accuracy[-1]:6.3f} "
+        print(f"{res.scheme:12s} {res.accuracy[-1]:6.3f} "
               f"{max(res.accuracy):6.3f} {res.num_global_updates:5d} "
-              f"{res.idle_connections:4d}/{res.total_connections:5d}  "
+              f"{res.idle_connections:5d}/{res.total_connections:5d}  "
               f"{res.staleness_hist.tolist()}  ({time.time() - t0:.0f}s)")
 
 

@@ -50,8 +50,21 @@ class Scheduler:
     answer it inside a jitted scan without per-window Python dispatch.
     Schedulers are registered by name (`repro.fl.registry.SCHEDULERS`)
     and built with `make_scheduler`.
+
+    `isl_mode` declares which ISL transition the scheduler's policy is
+    built on — ``"sink"`` (intra-plane relay toward elected sink
+    satellites), ``"gossip"`` (asynchronous intra-ring version exchange),
+    or None (ground-only, the default). The engine activates the declared
+    mode only when the run also carries a resolved ISL runtime
+    (`repro.core.isl.ISL`, from `FLExperiment.isl`), and then sets the
+    `isl` instance attribute before `reset()` so the scheduler can read
+    the topology; ground-only schedulers under an ISL-configured
+    experiment keep running the unmodified protocol, which is what makes
+    with/without-ISL comparisons share one world.
     """
     name = "base"
+    isl_mode = None      # "sink" | "gossip" | None (ground-only)
+    isl = None           # resolved repro.core.isl.ISL, set by the engine
 
     def reset(self):
         """Clear per-run state. The engine calls this once in `prepare()`;
@@ -295,6 +308,74 @@ class FedSpaceScheduler(Scheduler):
                 jnp.int32(self._window_start))
         return _fedspace_indicator, args, \
             self._window_start + self.I0 - i
+
+
+@register_scheduler("intra_plane")
+class IntraPlaneScheduler(Scheduler):
+    """Sink-satellite scheduling over intra-plane ISLs (arXiv 2302.13447):
+    every plane relays its members' updates along the ring to an elected
+    sink, which uplinks them in one ground pass; the GS aggregates once
+    every *reachable* satellite's update has arrived.
+
+    `M` overrides the aggregation threshold; the default (None) resolves
+    it to the number of satellites in planes with at least one effective
+    ground contact over the run (`repro.core.isl.reachable_count`) — a
+    sync barrier over the satellites that can contribute at all, which is
+    what keeps the policy live when part of the constellation (e.g.
+    mid-inclination Starlink shells over a polar-only ground network)
+    never sees a station. Election cadence and hop latency live in the
+    run's `ISLConfig`; without an ISL runtime the scheduler degrades to a
+    plain sync-over-K barrier on physical contacts."""
+    name = "intra_plane"
+    isl_mode = "sink"
+
+    def __init__(self, M: Optional[int] = None):
+        self.M = M
+        self.reset()
+
+    def reset(self):
+        self._M_resolved: Optional[int] = None
+
+    def _threshold(self, connectivity, K) -> int:
+        if self.M is not None:
+            return self.M
+        if self._M_resolved is None:
+            if self.isl is None:
+                self._M_resolved = K
+            else:
+                from repro.core.isl import reachable_count
+                self._M_resolved = max(
+                    reachable_count(self.isl.topology, connectivity), 1)
+        return self._M_resolved
+
+    def decide(self, i, *, n_in_buffer, K, connectivity, **_):
+        return n_in_buffer >= self._threshold(connectivity, K)
+
+    def device_plan(self, i, *, K, connectivity, **_):
+        return _fedbuff_indicator, \
+            jnp.int32(self._threshold(connectivity, K)), None
+
+
+@register_scheduler("isl_async")
+class IslAsyncScheduler(Scheduler):
+    """Asynchronous FL over intra-plane gossip (arXiv 2206.00307): ring
+    neighbours exchange models between ground contacts (the engine's
+    gossip transition), satellites upload at their own physical contacts,
+    and the GS aggregates as soon as `M` updates are buffered (default 1
+    — fully asynchronous, eq. 6, which is the regime the cited paper
+    targets). The gossip hop period comes from the run's `ISLConfig`
+    rate/model-size sentinels."""
+    name = "isl_async"
+    isl_mode = "gossip"
+
+    def __init__(self, M: int = 1):
+        self.M = max(int(M), 1)
+
+    def decide(self, i, *, n_in_buffer, **_):
+        return n_in_buffer >= self.M
+
+    def device_plan(self, i, **_):
+        return _fedbuff_indicator, jnp.int32(self.M), None
 
 
 def make_scheduler(name: str, **kw) -> Scheduler:

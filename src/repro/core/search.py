@@ -80,13 +80,15 @@ def _narrow_state(state: SS.SatState, ig: int, horizon: int):
     """int16 copy of (state, ig) when every version the window can produce
     fits — on CPU the narrowed vmapped scan moves half the bytes and runs
     ~3x faster, with bit-identical marks. Falls back to int32 otherwise.
-    The `progress` column (if attached) stays int32: its arithmetic only
-    meets the int32 grant/need scalars, never the version fields."""
+    The `progress` and `relay` columns (if attached) stay int32: their
+    arithmetic only meets int32 grant/need/hop scalars, never the version
+    fields."""
     if ig + horizon < np.iinfo(np.int16).max - 1:
         dt = jnp.int16
     else:
         dt = jnp.int32
-    return (SS.SatState(*(x.astype(dt) for x in state[:3]), state.progress),
+    return (SS.SatState(*(x.astype(dt) for x in state[:3]), state.progress,
+                        state.relay),
             jnp.asarray(ig, dt))
 
 

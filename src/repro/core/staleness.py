@@ -37,11 +37,18 @@ class SatState(NamedTuple):
     pending upload while one exists, the model download otherwise). It is
     ``None`` — an empty pytree node, invisible to jit/scan/vmap — unless the
     run models finite link budgets (see `LinkGate`), so geometry-only
-    callers keep the exact three-column state of previous releases."""
+    callers keep the exact three-column state of previous releases.
+
+    `relay` is the intra-plane relay column of the ISL layer
+    (`repro.core.isl`): hop units the satellite's pending update has
+    accumulated toward its plane's sink satellite. Same empty-pytree-node
+    idiom — ``None`` unless the run models sink-satellite relaying, so
+    non-ISL callers are untouched bit-for-bit."""
     version: jnp.ndarray     # last global version received (-1 = never)
     pending: jnp.ndarray     # base version of trained-but-unsent update (-1)
     buffered: jnp.ndarray    # base version of update sitting in GS buffer (-1)
     progress: Optional[jnp.ndarray] = None  # in-progress transfer units
+    relay: Optional[jnp.ndarray] = None     # accumulated ISL hop units
 
 
 class LinkGate(NamedTuple):
@@ -72,22 +79,27 @@ class LinkGate(NamedTuple):
     need_dn: jnp.ndarray
 
 
-def init_state(K: int, *, progress: bool = False) -> SatState:
+def init_state(K: int, *, progress: bool = False,
+               relay: bool = False) -> SatState:
     m1 = jnp.full((K,), -1, jnp.int32)
     return SatState(version=m1, pending=m1, buffered=m1,
                     progress=jnp.zeros((K,), jnp.int32) if progress
-                    else None)
+                    else None,
+                    relay=jnp.zeros((K,), jnp.int32) if relay else None)
 
 
-def bootstrap_state(K: int, *, progress: bool = False) -> SatState:
+def bootstrap_state(K: int, *, progress: bool = False,
+                    relay: bool = False) -> SatState:
     """All satellites already hold version 0 and have a pending update on it
     (the GS seeds the constellation with w^0). `progress=True` attaches the
-    zeroed in-progress-transfer column for link-budget runs."""
+    zeroed in-progress-transfer column for link-budget runs; `relay=True`
+    the zeroed ISL relay column for sink-satellite runs."""
     return SatState(version=jnp.zeros((K,), jnp.int32),
                     pending=jnp.zeros((K,), jnp.int32),
                     buffered=jnp.full((K,), -1, jnp.int32),
                     progress=jnp.zeros((K,), jnp.int32) if progress
-                    else None)
+                    else None,
+                    relay=jnp.zeros((K,), jnp.int32) if relay else None)
 
 
 # ---------------------------------------------------------------------------
@@ -138,7 +150,8 @@ def upload_step(state: SatState, ig, connected, link: Optional[LinkGate]
             "n_connected": jnp.sum(connected.astype(jnp.int32)),
             "n_idle": jnp.sum(idle.astype(jnp.int32)),
             "n_buffered": jnp.sum((buffered >= 0).astype(jnp.int32))}
-    return SatState(state.version, pending, buffered, progress), info
+    return SatState(state.version, pending, buffered, progress,
+                    state.relay), info
 
 
 def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
@@ -171,7 +184,7 @@ def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
     new_ig = ig + aggregate.astype(jnp.asarray(ig).dtype)
     buffered = jnp.where(aggregate, _m1(state.buffered), state.buffered)
     new_state = SatState(state.version, state.pending, buffered,
-                         state.progress)
+                         state.progress, state.relay)
     if collect == "none":
         return new_state, new_ig, {}
     counted = in_buffer & aggregate
@@ -261,8 +274,8 @@ def download_step(state: SatState, ig, connected, link: Optional[LinkGate]
         progress = jnp.where(done, 0, progress)
     version = jnp.where(done, ig, state.version)
     pending = jnp.where(done, ig, state.pending)
-    return SatState(version, pending, state.buffered, progress), \
-        {"downloads": done}
+    return SatState(version, pending, state.buffered, progress,
+                    state.relay), {"downloads": done}
 
 
 def step(state: SatState, ig, connected, aggregate, *, s_max: int,

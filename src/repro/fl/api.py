@@ -38,6 +38,7 @@ from typing import Dict, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import connectivity as CN
+from repro.core.isl import ISLConfig, build_isl
 from repro.data.fmow import FmowSpec, SyntheticFmow
 from repro.data.partition import iid_partition, noniid_partition
 from repro.data.pipeline import make_clients
@@ -47,7 +48,7 @@ from repro.fl.registry import (ADAPTERS, PARTITIONS, SCHEDULERS,
                                register_partition)
 
 __all__ = ["ConstellationConfig", "DatasetConfig", "PartitionConfig",
-           "AdapterConfig", "SchedulerConfig", "LinkConfig",
+           "AdapterConfig", "SchedulerConfig", "LinkConfig", "ISLConfig",
            "FLExperiment", "Federation"]
 
 
@@ -189,6 +190,13 @@ class FLExperiment:
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     train: EngineConfig = field(default_factory=EngineConfig)
     link: LinkConfig = field(default_factory=LinkConfig)
+    # optional inter-satellite-link layer (repro.core.isl.ISLConfig):
+    # resolved against the constellation's plane geometry by
+    # `Federation.from_experiment`; None (default) = no ISLs, bit-identical
+    # to previous releases. It only changes runs whose scheduler declares
+    # an `isl_mode` (the "intra_plane" / "isl_async" schedulers), so one
+    # ISL-configured world serves with/without-ISL scheduler comparisons.
+    isl: Optional[ISLConfig] = None
     seed: int = 0
 
     def describe(self) -> dict:
@@ -223,7 +231,7 @@ class Federation:
     def __init__(self, *, experiment: FLExperiment, spec, C: np.ndarray,
                  data, adapter, scheduler=None,
                  scheduler_diag: Optional[dict] = None,
-                 link_budget=None,
+                 link_budget=None, isl=None,
                  _regressor_cache: Optional[Dict] = None):
         self.experiment = experiment
         self.spec = spec
@@ -235,6 +243,9 @@ class Federation:
         # resolved LinkBudget when the experiment's LinkConfig is
         # capacity/rate-constrained (None = geometry-only links)
         self.link_budget = link_budget
+        # resolved repro.core.isl.ISL runtime when the experiment declares
+        # an ISLConfig (None = satellites only talk to ground stations)
+        self.isl = isl
         # FedSpace phase-1 (regressor, diag) keyed by setup knobs, shared
         # across with_scheduler clones of this world
         self._regressor_cache: Dict = ({} if _regressor_cache is None
@@ -273,8 +284,9 @@ class Federation:
                                  **exp.partition.params)
         adapter = ADAPTERS.build(exp.adapter.kind, data,
                                  make_clients(parts), **exp.adapter.params)
+        isl = build_isl(spec, exp.isl) if exp.isl is not None else None
         fed = cls(experiment=exp, spec=spec, C=C, data=data,
-                  adapter=adapter, link_budget=budget)
+                  adapter=adapter, link_budget=budget, isl=isl)
         fed.scheduler, diag = fed._build_scheduler(exp)
         fed.scheduler_diag = diag
         return fed
@@ -320,7 +332,7 @@ class Federation:
         exp = dataclasses.replace(self.experiment, scheduler=cfg)
         fed = Federation(experiment=exp, spec=self.spec, C=self.C,
                          data=self.data, adapter=self.adapter,
-                         link_budget=self.link_budget,
+                         link_budget=self.link_budget, isl=self.isl,
                          _regressor_cache=self._regressor_cache)
         fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
         return fed
@@ -342,7 +354,8 @@ class Federation:
         return SimulationEngine(self.C, self.adapter, self.scheduler, cfg,
                                 callbacks=callbacks,
                                 init_params=init_params,
-                                link_budget=self.link_budget)
+                                link_budget=self.link_budget,
+                                isl=self.isl)
 
     def run(self, *, callbacks: Sequence = (),
             init_params=None) -> SimResult:

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.checkpoint import DeviceCheckpointStore
+from repro.core import isl as ISL
 from repro.core import staleness as SS
 from repro.core.aggregation import aggregation_weights
 from repro.core.scheduler import Scheduler
@@ -87,13 +88,53 @@ def _download(state, ig, conn, gate):
     return state
 
 
+def _sink_gate(gate, sink):
+    """Gather the link gate at each satellite's sink: the plane's shared
+    transfer rides the sink's contact units (None passes through)."""
+    return None if gate is None \
+        else gate._replace(grant=gate.grant[..., sink])
+
+
+@jax.jit
+def _isl_upload(state, ig, conn, gate, sink, need):
+    """Sink-relay upload transition (host loop): advance the ring relay
+    one window, then run the shared `upload_step` on sink-indexed
+    effective connectivity — a member uploads once its update has hopped
+    to its plane's sink and the sink has a (served, grant-sufficient)
+    contact."""
+    state, arrived = ISL.relay_step(state, need)
+    eff = ISL.sink_connectivity(conn, sink, arrived, state.pending)
+    state, info = SS.upload_step(state, ig, eff, _sink_gate(gate, sink))
+    return state, jnp.stack([info["n_connected"], info["n_idle"],
+                             info["n_buffered"]])
+
+
+@jax.jit
+def _isl_download(state, ig, conn, gate, sink, need):
+    """Sink-relay download transition (host loop): the plane fetches the
+    global model through the sink's contact (no relay advance — uploads
+    advanced it this window already); satellites starting a fresh round
+    reset their relay counter."""
+    arrived = state.relay >= need
+    eff = ISL.sink_connectivity(conn, sink, arrived, state.pending)
+    state, dn = SS.download_step(state, ig, eff, _sink_gate(gate, sink))
+    return ISL.reset_relay(state, dn["downloads"])
+
+
+@jax.jit
+def _gossip(state, nxt, prv, left, right, do_hop):
+    state, _ = ISL.gossip_step(state, nxt, prv, left, right, do_hop)
+    return state
+
+
 def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("indicator", "horizon"))
-def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev, *,
-                  indicator, horizon):
+@functools.partial(jax.jit, static_argnames=("indicator", "horizon",
+                                             "isl_mode"))
+def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
+                  isl_dev=None, *, indicator, horizon, isl_mode=None):
     """Advance the protocol over up to `horizon` windows starting at
     absolute window i0, freezing at the first window whose aggregation
     indicator fires (post-upload, pre-aggregation — the engine trains and
@@ -105,6 +146,15 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev, *,
     need_dn)`` — the padded device grants matrix plus unit needs — in which
     case the scanned upload/download transitions are gated per window
     through the shared `repro.core.staleness.LinkGate` semantics.
+
+    `isl_mode`/`isl_dev` thread the ISL transitions (`repro.core.isl`)
+    into the same scan: ``"sink"`` takes ``(sink, need_hops)`` — one
+    election, valid for the whole chunk (the engine clips chunks to
+    election epochs) — and runs relay advance + sink-indexed effective
+    connectivity around the shared transitions; ``"gossip"`` takes
+    ``(nxt, prv, left, right, period)`` and applies the neighbour
+    version-exchange before each window's upload. ``None`` (the default)
+    compiles the exact ground-only program of previous releases.
 
     Returns (state, counters (horizon, 4) int32) with per-window
     [n_connected, n_idle, n_buffered, a]; counter rows after the event row
@@ -125,14 +175,34 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev, *,
         gate = None if link_dev is None \
             else SS.LinkGate(inp[2], need_up, need_dn)
         live = (~done) & (t - i0 < n_valid)
-        up_st, info = SS.upload_step(st, ig, conn, gate)
+        if isl_mode == "sink":
+            sink, need = isl_dev
+            st2, arrived = ISL.relay_step(st, need)
+            up_conn = ISL.sink_connectivity(conn, sink, arrived,
+                                            st2.pending)
+            gate = _sink_gate(gate, sink)
+            up_st, info = SS.upload_step(st2, ig, up_conn, gate)
+            dn_conn = ISL.sink_connectivity(conn, sink, arrived,
+                                            up_st.pending)
+        elif isl_mode == "gossip":
+            g_nxt, g_prv, g_left, g_right, period = isl_dev
+            do_hop = (period <= 1) | (t % period == 0)
+            st2, _ = ISL.gossip_step(st, g_nxt, g_prv, g_left, g_right,
+                                     do_hop)
+            up_st, info = SS.upload_step(st2, ig, conn, gate)
+            dn_conn = conn
+        else:
+            up_st, info = SS.upload_step(st, ig, conn, gate)
+            dn_conn = conn
         n_buf = info["n_buffered"]
         a = live & indicator(t, n_buf, ind_args) & (n_buf > 0)
-        dl_st, _ = SS.download_step(up_st, ig, conn, gate)
-        nxt = _tree_where(live, _tree_where(a, up_st, dl_st), st)
+        dl_st, dn = SS.download_step(up_st, ig, dn_conn, gate)
+        if isl_mode == "sink":
+            dl_st = ISL.reset_relay(dl_st, dn["downloads"])
+        new_st = _tree_where(live, _tree_where(a, up_st, dl_st), st)
         counters = jnp.stack([info["n_connected"], info["n_idle"], n_buf,
                               a.astype(jnp.int32)])
-        return (nxt, done | a), counters
+        return (new_st, done | a), counters
 
     (state, _), counters = jax.lax.scan(body, (state, jnp.bool_(False)), xs)
     return state, counters
@@ -244,12 +314,21 @@ class SimulationEngine:
         units through the shared `LinkGate` transitions — in the fast loop
         and the host loop alike. A trivial budget (unlimited capacity,
         zero needs) is bit-identical to `link_budget=None`.
+      isl: optional `repro.core.isl.ISL` runtime (topology + hop latency +
+        election period, resolved by `Federation.from_experiment` from
+        `FLExperiment.isl`). It only takes effect when the scheduler also
+        declares an `isl_mode` ("sink": intra-plane relay toward elected
+        sink satellites; "gossip": asynchronous neighbour version
+        exchange) — ground-only schedulers under the same experiment run
+        the unmodified protocol, so with/without-ISL comparisons share one
+        world. `isl=None` (default) leaves every code path bit-identical
+        to previous releases.
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
                  config: Optional[EngineConfig] = None, *,
                  callbacks: Sequence = (), init_params=None,
-                 link_budget=None, **overrides):
+                 link_budget=None, isl=None, **overrides):
         cfg = config if config is not None else EngineConfig()
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
@@ -259,6 +338,7 @@ class SimulationEngine:
                          else cfg.uplink_topk))
         self.config = cfg
         self.link_budget = link_budget
+        self.isl = isl
         grants = None
         if link_budget is not None:
             C = link_budget.served
@@ -314,11 +394,26 @@ class SimulationEngine:
         return None if self.state.progress is None \
             else np.asarray(self.state.progress)
 
+    @property
+    def relay_units(self):
+        """Host mirror of per-satellite accumulated ISL hop units (None
+        unless the run relays through sink satellites)."""
+        return None if self.state.relay is None \
+            else np.asarray(self.state.relay)
+
     def prepare(self) -> None:
         """Initialize run state (model, client-update programs, checkpoint
         ring, device-resident protocol state). `run` calls this; benchmarks
         and tests call it directly to drive individual protocol steps."""
         cfg = self.config
+        # ISL activates only when BOTH the runtime and a scheduler-declared
+        # mode are present; the scheduler reads the runtime (topology) via
+        # its `isl` attribute, bound before reset()
+        mode = getattr(self.scheduler, "isl_mode", None)
+        self._isl = self.isl if (self.isl is not None
+                                 and mode is not None) else None
+        self._isl_mode = mode if self._isl is not None else None
+        self.scheduler.isl = self._isl
         self.scheduler.reset()
         self._stop_requested = False
 
@@ -338,9 +433,11 @@ class SimulationEngine:
         self.store.put(0, self.params)
         self.ig = 0
         # every satellite holds w^0 with a pending round on it (Alg. 1
-        # init); link-budget runs carry the in-progress-transfer column
+        # init); link-budget runs carry the in-progress-transfer column,
+        # sink-relay runs the ISL relay column
         linked = self.link_budget is not None
-        self.state = SS.bootstrap_state(self.K, progress=linked)
+        self.state = SS.bootstrap_state(self.K, progress=linked,
+                                        relay=self._isl_mode == "sink")
         if linked:
             b = self.link_budget
             self._need_up = jnp.int32(b.need_up)
@@ -367,6 +464,19 @@ class SimulationEngine:
                 [self._grants[:self.num_windows],
                  np.zeros((_MAX_CHUNK, self.K), np.int32)]))
             self._link_dev = (G_dev, self._need_up, self._need_dn)
+        # ISL device state: sink elections are cached per epoch (sink
+        # mode); the gossip neighbour arrays are run constants
+        self._sink_cache = {}
+        self._gossip_dev = None
+        if self._isl_mode == "gossip":
+            topo = self._isl.topology
+            idx = np.arange(self.K, dtype=np.int32)
+            cross = self._isl.cross_plane
+            self._gossip_dev = (
+                jnp.asarray(topo.nxt), jnp.asarray(topo.prv),
+                jnp.asarray(topo.left if cross else idx),
+                jnp.asarray(topo.right if cross else idx),
+                jnp.int32(max(self._isl.relay_windows, 1)))
 
         self.result = SimResult(scheme=self.scheduler.name,
                                 target_acc=cfg.target_acc)
@@ -423,6 +533,16 @@ class SimulationEngine:
         return SS.LinkGate(jnp.asarray(self._grants[i]), self._need_up,
                            self._need_dn)
 
+    def _sink_plan(self, i: int):
+        """Device (sink, need_hops) arrays for window i's election epoch,
+        elected once per epoch from the run's effective connectivity."""
+        ep = self._isl.epoch
+        e = i // ep
+        if e not in self._sink_cache:
+            sink, need = self._isl.sink_plan(self.C[e * ep:(e + 1) * ep])
+            self._sink_cache[e] = (jnp.asarray(sink), jnp.asarray(need))
+        return self._sink_cache[e]
+
     def _fast_chunk_plan(self, i: int):
         """Ask the scheduler for a device-side indicator valid from window
         i; clip the chunk to eval boundaries (where `status` changes) and
@@ -437,6 +557,10 @@ class SimulationEngine:
                    else self.num_windows - i)
         ev = self.config.eval_every
         end = min(end, self.num_windows, (i // ev + 1) * ev, i + _MAX_CHUNK)
+        if self._isl_mode == "sink":
+            # one sink election per scan: clip chunks to election epochs
+            ep = self._isl.epoch
+            end = min(end, (i // ep + 1) * ep)
         return fn, args, end
 
     def _run_chunk(self, i: int, fn, args, end: int):
@@ -449,10 +573,16 @@ class SimulationEngine:
         while w < end:
             H = end - w
             bucket = 1 << (H - 1).bit_length()
+            if self._isl_mode == "sink":
+                isl_dev = self._sink_plan(w)
+            elif self._isl_mode == "gossip":
+                isl_dev = self._gossip_dev
+            else:
+                isl_dev = None
             self.state, counters = _scan_windows(
                 self.state, jnp.int32(self.ig), self._C_dev, jnp.int32(w),
-                jnp.int32(H), args, self._link_dev, indicator=fn,
-                horizon=bucket)
+                jnp.int32(H), args, self._link_dev, isl_dev, indicator=fn,
+                horizon=bucket, isl_mode=self._isl_mode)
             counters = np.asarray(counters)
             advanced = H
             for j in range(H):
@@ -480,12 +610,25 @@ class SimulationEngine:
 
     def on_uploads(self, i: int, conn: np.ndarray) -> int:
         """Connected satellites hand their pending update to the GS buffer
-        (shared `upload_step` transition on device). Returns the buffer
+        (shared `upload_step` transition on device; under an active ISL
+        mode the sink-relay or gossip transition composes in front of it,
+        identically to the fast loop's scan body). Returns the buffer
         occupancy."""
         res = self.result
-        self.state, counters = _upload(
-            self.state, jnp.int32(self.ig),
-            jnp.asarray(np.asarray(conn, bool)), self._gate(i))
+        conn_dev = jnp.asarray(np.asarray(conn, bool))
+        if self._isl_mode == "sink":
+            sink, need = self._sink_plan(i)
+            self.state, counters = _isl_upload(
+                self.state, jnp.int32(self.ig), conn_dev, self._gate(i),
+                sink, need)
+        else:
+            if self._isl_mode == "gossip":
+                per = int(self._gossip_dev[4])
+                self.state = _gossip(
+                    self.state, *self._gossip_dev[:4],
+                    jnp.bool_(per <= 1 or i % per == 0))
+            self.state, counters = _upload(self.state, jnp.int32(self.ig),
+                                           conn_dev, self._gate(i))
         n_conn, n_idle, n_buf = (int(x) for x in np.asarray(counters))
         res.total_connections += n_conn
         res.idle_connections += n_idle
@@ -611,10 +754,17 @@ class SimulationEngine:
         """Connected satellites fetch the current global model and start a
         fresh local round on it (shared `download_step` transition),
         link-gated on accumulated downlink progress when a budget is
-        modeled."""
-        self.state = _download(self.state, jnp.int32(self.ig),
-                               jnp.asarray(np.asarray(conn, bool)),
-                               self._gate(i))
+        modeled. Under sink relaying the plane downloads through its
+        sink's contact and fresh rounds reset the relay counter (the fast
+        loop's scan body does the same at non-event windows)."""
+        conn_dev = jnp.asarray(np.asarray(conn, bool))
+        if self._isl_mode == "sink":
+            sink, need = self._sink_plan(i)
+            self.state = _isl_download(self.state, jnp.int32(self.ig),
+                                       conn_dev, self._gate(i), sink, need)
+        else:
+            self.state = _download(self.state, jnp.int32(self.ig),
+                                   conn_dev, self._gate(i))
 
     # --------------------------------------------------------------- eval
 

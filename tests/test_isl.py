@@ -1,0 +1,467 @@
+"""ISL subsystem tests: ring-topology invariants (property-tested over
+random multi-shell specs), sink election, the device-resident relay/gossip
+transitions, fast-vs-host engine lockstep for both ISL schedulers, the
+identity-topology parity gate, and the `isl=None` bit-identity guarantee
+(engine strategies and the eq.-13 search alike)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isl as ISL
+from repro.core import staleness as SS
+from repro.core.connectivity import (ConstellationSpec, LinkBudget, Shell,
+                                     constellation_preset)
+from repro.core.scheduler import make_scheduler
+from repro.fl.engine import EngineConfig, SimulationEngine
+from repro.fl.registry import SCHEDULERS
+
+
+class _StubAdapter:
+    """Zero-gradient adapter: runs isolate the protocol dynamics."""
+
+    def __init__(self, K):
+        self.clients = list(range(K))
+
+    def init(self, key):
+        return {"w": jnp.zeros((2,))}
+
+    def loss(self, params, batch):
+        return jnp.sum(params["w"]) * 0.0 + jnp.sum(batch) * 0.0
+
+    def client_batch(self, ci, round_rng, batch_size, num_batches):
+        return jnp.zeros((num_batches, 1))
+
+    def accuracy(self, params):
+        return 0.0
+
+    def val_loss(self, params):
+        return 0.0
+
+
+# --------------------------------------------------------------------------
+# ring-topology invariants
+
+
+@st.composite
+def _multi_shell_spec(draw):
+    """Random 1-3 shell Walker spec (small satellite counts)."""
+    shells = []
+    for s in range(draw(st.integers(1, 3))):
+        planes = draw(st.integers(1, 4))
+        per_plane = draw(st.integers(1, 5))
+        shells.append(Shell(planes * per_plane, planes,
+                            500_000.0 + 20_000.0 * s,
+                            50.0 + 20.0 * s))
+    shells = tuple(shells)
+    return ConstellationSpec(
+        num_satellites=sum(sh.num_satellites for sh in shells),
+        shells=shells, seed=draw(st.integers(0, 10)))
+
+
+def _check_ring_invariants(spec, topo):
+    K = spec.num_satellites
+    idx = np.arange(K)
+    # links never leave the plane (and hence never cross shells)
+    assert (topo.plane[topo.nxt] == topo.plane).all()
+    assert (topo.plane[topo.prv] == topo.plane).all()
+    shell = ISL._shell_ids(spec)
+    assert (shell[topo.nxt] == shell).all()
+    assert (shell[topo.left] == shell).all()
+    assert (shell[topo.right] == shell).all()
+    # symmetric ring: prv inverts nxt, so every link is traversed both ways
+    assert (topo.prv[topo.nxt] == idx).all()
+    assert (topo.nxt[topo.prv] == idx).all()
+    sizes = topo.plane_sizes()
+    for p in range(topo.num_planes):
+        m = np.flatnonzero(topo.plane == p)
+        n = m.size
+        assert sizes[p] == n
+        if n == 1:
+            assert topo.nxt[m[0]] == m[0] == topo.prv[m[0]]
+            continue
+        # 2-regular closed ring: following nxt visits every member once
+        seen, k = set(), m[0]
+        for _ in range(n):
+            assert k not in seen
+            seen.add(int(k))
+            assert topo.nxt[k] != k and topo.prv[k] != k
+            k = topo.nxt[k]
+        assert k == m[0] and len(seen) == n
+        # ring positions are a permutation of 0..n-1 in nxt order
+        assert sorted(topo.pos[m].tolist()) == list(range(n))
+        assert (topo.pos[topo.nxt[m]] == (topo.pos[m] + 1) % n).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(_multi_shell_spec())
+def test_ring_topology_invariants(spec):
+    """Symmetric, 2-regular-per-plane rings that never cross shells, for
+    random multi-shell Walker specs."""
+    topo = ISL.ring_topology(spec)
+    assert topo.num_planes == sum(sh.num_planes for sh in spec.shells)
+    _check_ring_invariants(spec, topo)
+
+
+def test_ring_topology_legacy_single_shell():
+    """The legacy single-shell path (paper's Planet-Flock mix) splits into
+    physical planes — sun-synchronous and ISS-orbit satellites never share
+    a ring — and derivation is deterministic in the spec."""
+    spec = constellation_preset("flock191")
+    topo = ISL.ring_topology(spec)
+    _check_ring_invariants(spec, topo)
+    # ISS-orbit satellites (different inclination/altitude) get their own
+    # planes: both orbit families present, no ring mixes them
+    from repro.core.connectivity import satellite_elements
+    _, inc, _, _ = satellite_elements(spec)
+    for p in range(topo.num_planes):
+        m = np.flatnonzero(topo.plane == p)
+        assert np.unique(np.round(inc[m], 9)).size == 1
+    assert np.unique(np.round(inc, 9)).size == 2
+    topo2 = ISL.ring_topology(constellation_preset("flock191"))
+    np.testing.assert_array_equal(topo.nxt, topo2.nxt)
+    np.testing.assert_array_equal(topo.plane, topo2.plane)
+
+
+def test_grid_neighbors_stay_in_shell_and_wrap():
+    """Cross-plane grid links connect adjacent planes of the SAME shell
+    (wrapping over RAAN order), self-loops for single-plane shells."""
+    spec = constellation_preset("starlink40")
+    topo = ISL.ring_topology(spec)
+    shell = ISL._shell_ids(spec)
+    assert (shell[topo.left] == shell).all()
+    assert (shell[topo.right] == shell).all()
+    # both starlink40 shells have 4 planes: every grid link leaves the
+    # plane but stays in the shell
+    assert (topo.plane[topo.left] != topo.plane).all()
+    assert (topo.plane[topo.right] != topo.plane).all()
+
+
+def test_identity_topology_is_all_self_loops():
+    topo = ISL.identity_topology(7)
+    idx = np.arange(7)
+    for arr in (topo.nxt, topo.prv, topo.left, topo.right):
+        np.testing.assert_array_equal(arr, idx)
+    np.testing.assert_array_equal(topo.plane, idx)
+    assert topo.num_planes == 7
+    np.testing.assert_array_equal(topo.ring_distance(idx), np.zeros(7))
+
+
+# --------------------------------------------------------------------------
+# sink election & reachability
+
+
+def test_elect_sinks_earliest_contact_wins():
+    topo = ISL.ring_topology(ConstellationSpec(
+        num_satellites=8, shells=(Shell(8, 2, 550_000.0, 53.0),)))
+    K = 8
+    C = np.zeros((6, K), bool)
+    p0 = np.flatnonzero(topo.plane == 0)
+    p1 = np.flatnonzero(topo.plane == 1)
+    C[3, p0[2]] = True          # plane 0: only member with a contact
+    C[1, p1[1]] = True          # plane 1: earliest ...
+    C[2, p1[3]] = True          # ... beats later
+    sink = ISL.elect_sinks(C, topo)
+    assert (sink[p0] == p0[2]).all()
+    assert (sink[p1] == p1[1]).all()
+    # ties on first contact: most total contacts, then lowest index
+    C2 = np.zeros((6, K), bool)
+    C2[1, p1[1]] = True
+    C2[1, p1[3]] = True
+    C2[4, p1[3]] = True
+    assert (ISL.elect_sinks(C2, topo)[p1] == p1[3]).all()
+    # no contact at all: lowest-index member
+    assert (ISL.elect_sinks(np.zeros((6, K), bool), topo)[p0]
+            == p0.min()).all()
+    # sinks always stay in their plane
+    assert (topo.plane[sink] == topo.plane).all()
+
+
+def test_reachable_count():
+    topo = ISL.ring_topology(ConstellationSpec(
+        num_satellites=8, shells=(Shell(8, 2, 550_000.0, 53.0),)))
+    C = np.zeros((4, 8), bool)
+    assert ISL.reachable_count(topo, C) == 0
+    C[0, np.flatnonzero(topo.plane == 1)[0]] = True
+    assert ISL.reachable_count(topo, C) == 4     # the whole touched plane
+    C[2, np.flatnonzero(topo.plane == 0)[2]] = True
+    assert ISL.reachable_count(topo, C) == 8
+
+
+def test_sink_plan_scales_ring_distance_by_hop_latency():
+    spec = ConstellationSpec(num_satellites=8,
+                             shells=(Shell(8, 1, 550_000.0, 53.0),))
+    topo = ISL.ring_topology(spec)
+    for rw in (0, 3):
+        runtime = ISL.ISL(topology=topo, relay_windows=rw, epoch=4)
+        C = np.zeros((4, 8), bool)
+        C[0, 5] = True
+        sink, need = runtime.sink_plan(C)
+        assert (sink == 5).all()
+        np.testing.assert_array_equal(need,
+                                      topo.ring_distance(sink) * rw)
+        assert need[5] == 0                       # the sink itself
+        assert need.max() == 4 * rw               # ring diameter of 8
+
+
+# --------------------------------------------------------------------------
+# device transitions
+
+
+def test_relay_step_and_reset():
+    state = SS.bootstrap_state(4, relay=True)       # everyone pending
+    need = jnp.asarray([0, 1, 2, 5], jnp.int32)
+    state, arrived = ISL.relay_step(state, need)
+    np.testing.assert_array_equal(np.asarray(state.relay), [1, 1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(arrived),
+                                  [True, True, False, False])
+    # uploaded satellites (pending < 0) stop accumulating
+    state = state._replace(pending=jnp.asarray([-1, 0, 0, 0], jnp.int32))
+    state, arrived = ISL.relay_step(state, need)
+    np.testing.assert_array_equal(np.asarray(state.relay), [1, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(arrived),
+                                  [True, True, True, False])
+    state = ISL.reset_relay(state, jnp.asarray([True, False, True, False]))
+    np.testing.assert_array_equal(np.asarray(state.relay), [0, 2, 0, 2])
+
+
+def test_sink_connectivity_semantics():
+    conn = jnp.asarray([True, False, False, False])
+    sink = jnp.asarray([0, 0, 3, 3], jnp.int32)
+    arrived = jnp.asarray([True, False, True, False])
+    pending = jnp.asarray([0, 0, 0, -1], jnp.int32)
+    eff = np.asarray(ISL.sink_connectivity(conn, sink, arrived, pending))
+    # k=0: sink 0 connected & arrived -> True; k=1: not arrived, pending
+    # in transit -> False; k=2: sink 3 has no contact -> False; k=3:
+    # nothing pending rides the sink contact, but sink 3 is dark -> False
+    np.testing.assert_array_equal(eff, [True, False, False, False])
+    eff2 = np.asarray(ISL.sink_connectivity(
+        conn, jnp.zeros(4, jnp.int32), arrived, pending))
+    # all on sink 0: arrived or idle pass, un-arrived transit blocks
+    np.testing.assert_array_equal(eff2, [True, False, True, True])
+
+
+def test_gossip_step_adopts_newer_neighbour_versions():
+    idx = jnp.arange(4, dtype=jnp.int32)
+    nxt = jnp.asarray([1, 2, 3, 0], jnp.int32)
+    prv = jnp.asarray([3, 0, 1, 2], jnp.int32)
+    state = SS.init_state(4, relay=False)._replace(
+        version=jnp.asarray([5, 0, 0, 0], jnp.int32),
+        pending=jnp.asarray([-1, 0, 0, 0], jnp.int32))
+    state, adopted = ISL.gossip_step(state, nxt, prv, idx, idx,
+                                     jnp.bool_(True))
+    # ring neighbours of the version-5 holder adopt it and restart local
+    # training on it; the opposite side of the ring hasn't heard yet
+    np.testing.assert_array_equal(np.asarray(state.version), [5, 5, 0, 5])
+    np.testing.assert_array_equal(np.asarray(state.pending), [-1, 5, 0, 5])
+    np.testing.assert_array_equal(np.asarray(adopted),
+                                  [False, True, False, True])
+    # do_hop=False is a frozen no-op
+    st2, adopted = ISL.gossip_step(state, nxt, prv, idx, idx,
+                                   jnp.bool_(False))
+    np.testing.assert_array_equal(np.asarray(st2.version),
+                                  np.asarray(state.version))
+    assert not np.asarray(adopted).any()
+
+
+# --------------------------------------------------------------------------
+# engine integration: lockstep, parity gates, isl=None bit-identity
+
+
+@st.composite
+def _world(draw):
+    """Random connectivity over a small 2-shell constellation."""
+    spec = ConstellationSpec(
+        num_satellites=10, shells=(Shell(6, 2, 550_000.0, 53.0),
+                                   Shell(4, 1, 560_000.0, 97.6)),
+        seed=draw(st.integers(0, 5)))
+    I = draw(st.integers(8, 30))
+    C = np.array(draw(st.lists(
+        st.lists(st.booleans(), min_size=10, max_size=10),
+        min_size=I, max_size=I)), bool)
+    return spec, C
+
+
+def _run(C, adapter, sched, *, fast, isl=None, budget=None):
+    eng = SimulationEngine(
+        C, adapter, sched,
+        EngineConfig(eval_every=C.shape[0] + 1, fast_loop=fast),
+        isl=isl, link_budget=budget)
+    res = eng.run()
+    assert eng._fast_ok == fast
+    return eng, res
+
+
+def _assert_same_trajectory(a, b, res_a=None, res_b=None):
+    np.testing.assert_array_equal(a.version, b.version)
+    np.testing.assert_array_equal(a.pending, b.pending)
+    np.testing.assert_array_equal(a.buffered_base, b.buffered_base)
+    assert a.ig == b.ig
+    if res_a is not None:
+        assert res_a.idle_connections == res_b.idle_connections
+        assert res_a.total_connections == res_b.total_connections
+        assert res_a.staleness_hist.tolist() == \
+            res_b.staleness_hist.tolist()
+
+
+@settings(max_examples=8, deadline=None)
+@given(_world(), st.integers(0, 2), st.integers(4, 12))
+def test_isl_engine_fast_host_lockstep(world, relay_windows, epoch):
+    """Both ISL schedulers traverse identical protocol state under the
+    chunked fast loop and the per-window host loop — for instantaneous and
+    multi-window hop latencies and different election epochs."""
+    spec, C = world
+    runtime = ISL.ISL(topology=ISL.ring_topology(spec),
+                      relay_windows=relay_windows, epoch=epoch)
+    K = C.shape[1]
+    for name, kw in (("intra_plane", {"M": 3}), ("isl_async", {})):
+        ef, rf = _run(C, _StubAdapter(K), make_scheduler(name, **kw),
+                      fast=True, isl=runtime)
+        eh, rh = _run(C, _StubAdapter(K), make_scheduler(name, **kw),
+                      fast=False, isl=runtime)
+        _assert_same_trajectory(ef, eh, rf, rh)
+        if name == "intra_plane":
+            np.testing.assert_array_equal(ef.relay_units, eh.relay_units)
+
+
+@settings(max_examples=8, deadline=None)
+@given(_world())
+def test_identity_topology_parity_with_fedbuff(world):
+    """The degenerate all-self-loop topology must reproduce the plain
+    ground-only fedbuff trajectory bit-for-bit under both strategies —
+    the gate the `isl` benchmark section enforces in CI."""
+    spec, C = world
+    K = C.shape[1]
+    ident = ISL.ISL(topology=ISL.identity_topology(K), relay_windows=0,
+                    epoch=8)
+    ref, ref_res = _run(C, _StubAdapter(K), make_scheduler("fedbuff", M=3),
+                        fast=True)
+    for fast in (True, False):
+        eng, res = _run(C, _StubAdapter(K),
+                        make_scheduler("intra_plane", M=3), fast=fast,
+                        isl=ident)
+        _assert_same_trajectory(eng, ref, res, ref_res)
+        assert eng.relay_units is not None       # the column exists...
+    # ...and gossip over self-loops is likewise invisible
+    for fast in (True, False):
+        eng, res = _run(C, _StubAdapter(K),
+                        make_scheduler("isl_async", M=3), fast=fast,
+                        isl=ident)
+        _assert_same_trajectory(eng, ref, res, ref_res)
+
+
+@settings(max_examples=6, deadline=None)
+@given(_world())
+def test_ground_only_scheduler_ignores_isl_runtime(world):
+    """A scheduler without an `isl_mode` runs bit-identically with and
+    without an ISL runtime attached — one ISL-configured world serves
+    with/without-ISL comparisons."""
+    spec, C = world
+    K = C.shape[1]
+    runtime = ISL.ISL(topology=ISL.ring_topology(spec), relay_windows=1,
+                      epoch=8)
+    for fast in (True, False):
+        ref, ref_res = _run(C, _StubAdapter(K),
+                            make_scheduler("fedbuff", M=3), fast=fast)
+        eng, res = _run(C, _StubAdapter(K), make_scheduler("fedbuff", M=3),
+                        fast=fast, isl=runtime)
+        _assert_same_trajectory(eng, ref, res, ref_res)
+        assert eng.state.relay is None and eng.relay_units is None
+
+
+@settings(max_examples=6, deadline=None)
+@given(_world(), st.integers(1, 3))
+def test_isl_lockstep_under_link_budget(world, cap):
+    """ISL relaying composes with finite link budgets: fast and host
+    strategies stay in lockstep when every upload/download is also gated
+    on accumulated sink-contact units."""
+    spec, C = world
+    I, K = C.shape
+    grants = (np.ones(C.shape, np.int32) * cap) * C
+    budget = LinkBudget(visible=C, served=C,
+                        assign=np.where(C, 0, -1).astype(np.int32),
+                        grants=grants, need_up=2, need_dn=1)
+    runtime = ISL.ISL(topology=ISL.ring_topology(spec), relay_windows=1,
+                      epoch=8)
+    for name in ("intra_plane", "isl_async"):
+        ef, rf = _run(C, _StubAdapter(K), make_scheduler(name, M=3),
+                      fast=True, isl=runtime, budget=budget)
+        eh, rh = _run(C, _StubAdapter(K), make_scheduler(name, M=3),
+                      fast=False, isl=runtime, budget=budget)
+        _assert_same_trajectory(ef, eh, rf, rh)
+
+
+def test_search_accepts_relay_column():
+    """The eq.-13 scorer passes the relay column through untouched — a
+    state captured mid-ISL-run scores identically to one without the
+    column (ground-only candidate simulation either way)."""
+    from repro.core.search import score_candidates
+
+    class _Oracle:
+        def predict(self, feats):
+            return np.ones(feats.shape[0], np.float32)
+
+    rng = np.random.default_rng(0)
+    C = rng.random((12, 6)) < 0.4
+    cands = np.asarray(rng.random((8, 12)) < 0.3, np.int32)
+    plain = SS.bootstrap_state(6)
+    with_relay = SS.bootstrap_state(6, relay=True)
+    s0 = score_candidates(cands, C, plain, 0, _Oracle(), 1.0)
+    s1 = score_candidates(cands, C, with_relay, 0, _Oracle(), 1.0)
+    np.testing.assert_array_equal(s0, s1)
+
+
+def test_registry_and_federation_wiring():
+    """The ISL schedulers are registered with their modes; FLExperiment.isl
+    resolves to a runtime shared across `with_scheduler` clones."""
+    from repro.fl.api import (ConstellationConfig, DatasetConfig,
+                              FLExperiment, Federation, ISLConfig,
+                              SchedulerConfig)
+
+    assert "intra_plane" in SCHEDULERS.names()
+    assert "isl_async" in SCHEDULERS.names()
+    assert make_scheduler("intra_plane").isl_mode == "sink"
+    assert make_scheduler("isl_async").isl_mode == "gossip"
+    assert make_scheduler("fedbuff", M=1).isl_mode is None
+
+    cfg = ISLConfig(isl_mbps=4.0, model_mb=600.0)
+    assert cfg.relay_windows == 2       # ceil(600*8 / 4.0 / 900) = 2
+    exp = FLExperiment(
+        constellation=ConstellationConfig(preset="starlink40", days=0.25),
+        dataset=DatasetConfig(num_train=60, num_val=30),
+        scheduler=SchedulerConfig(kind="intra_plane"),
+        isl=cfg)
+    fed = Federation.from_experiment(exp)
+    assert fed.isl is not None
+    assert fed.isl.relay_windows == cfg.relay_windows
+    assert fed.isl.topology.num_planes == 8
+    fed2 = fed.with_scheduler("isl_async")
+    assert fed2.isl is fed.isl
+    # isl=None experiments resolve to no runtime
+    assert Federation.from_experiment(FLExperiment(
+        constellation=ConstellationConfig(preset="starlink40", days=0.25),
+        dataset=DatasetConfig(num_train=60, num_val=30))).isl is None
+
+
+def test_intra_plane_threshold_resolution():
+    """intra_plane's default M is the reachable-satellite count (planes
+    with at least one effective contact); an explicit M overrides it, and
+    without an ISL runtime it degrades to a sync-over-K barrier."""
+    spec = ConstellationSpec(num_satellites=8,
+                             shells=(Shell(8, 2, 550_000.0, 53.0),))
+    topo = ISL.ring_topology(spec)
+    C = np.zeros((6, 8), bool)
+    C[0, np.flatnonzero(topo.plane == 0)[0]] = True    # one plane reachable
+    runtime = ISL.ISL(topology=topo, relay_windows=0, epoch=6)
+
+    s = make_scheduler("intra_plane")
+    s.isl = runtime
+    s.reset()
+    assert s._threshold(C, 8) == 4
+    s2 = make_scheduler("intra_plane", M=2)
+    s2.isl = runtime
+    s2.reset()
+    assert s2._threshold(C, 8) == 2
+    s3 = make_scheduler("intra_plane")
+    s3.isl = None
+    s3.reset()
+    assert s3._threshold(C, 8) == 8
