@@ -49,6 +49,13 @@ vectorized/device-resident path, with machine-readable output.
    the sparse-ground starlink40 preset under a finite link budget,
    FedSpace / fedbuff vs the intra-plane sink scheduler and ISL gossip,
    gated on sink relaying actually reducing the eq.-10 idle share.
+8. **Fault injection** (robustness layer): (a) the parity gate — an
+   all-alive fault trace must reproduce the ``faults=None`` trajectory
+   bit-for-bit under both engine strategies on the geometry and
+   link-budget paths; (b) the degradation study — sync / fedbuff /
+   fedspace / intra-plane on starlink40 over dense12 under *blind*
+   satellite churn, a total station blackout, and weather-degraded
+   links, gated on churn measurably reducing aggregated gradients.
 
 Every section registers itself in `SECTIONS`; the runner iterates the
 registry and fails if a registered section is missing from the report, so
@@ -59,6 +66,9 @@ committed baseline; CI uploads the smoke report as a build artifact).
 Regenerate the baseline with:
 
     PYTHONPATH=src python -m benchmarks.hotpaths
+
+Run a named subset against the existing report with ``--sections``, e.g.
+``python -m benchmarks.hotpaths --sections faults,isl``.
 """
 from __future__ import annotations
 
@@ -748,15 +758,16 @@ def bench_link_budget(smoke: bool) -> dict:
 # 7. inter-satellite links: identity-topology parity gate + idle-time study
 
 
-def _isl_run(C, scheduler, *, windows, isl=None, budget=None, fast=True):
-    """One protocol-isolated engine run under an optional ISL runtime;
-    returns (engine, result, wall seconds)."""
+def _isl_run(C, scheduler, *, windows, isl=None, budget=None, fast=True,
+             faults=None):
+    """One protocol-isolated engine run under an optional ISL runtime and
+    fault trace; returns (engine, result, wall seconds)."""
     K = C.shape[1]
     eng = SimulationEngine(
         C, _NullAdapter(K), scheduler,
         EngineConfig(eval_every=windows, max_windows=windows,
                      fast_loop=fast),
-        link_budget=budget, isl=isl)
+        link_budget=budget, isl=isl, faults=faults)
     t0 = time.perf_counter()
     res = eng.run()
     return eng, res, time.perf_counter() - t0
@@ -881,6 +892,150 @@ def bench_isl(smoke: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 8. fault injection: all-alive parity gate + the churn/blackout study
+
+
+@section("faults",
+         parity=lambda r: r["all_alive_trajectory_identical"]
+         and r.get("degradation_observed", True))
+def bench_faults(smoke: bool) -> dict:
+    """(a) Parity gate: an all-alive fault trace — no deorbits, every
+    station up, unit weather — must reproduce the ``faults=None``
+    trajectory bit-for-bit under BOTH engine strategies, on the
+    geometry-only path and the link-budget path (the contract that fault
+    injection is a pure mask over the clean artifacts, and that the
+    inactive masks add nothing to the compiled programs). (b) Degradation
+    study (full runs only): sync / fedbuff / fedspace / intra-plane sinks
+    on starlink40 over the dense12 ground network under *blind* faults —
+    escalating satellite churn, a total ground-network blackout, and
+    weather-degraded links — reporting the idle/staleness/aggregated-
+    gradient curves each scheduler traces as the planned and executed
+    worlds diverge."""
+    from repro.core import isl as ISL
+    from repro.core.connectivity import (LinkBudget, constellation_preset,
+                                         link_budget)
+    from repro.core.faults import (FaultConfig, fault_trace, random_churn,
+                                   station_blackout)
+
+    # (a) all-alive parity, geometry and budget paths, both strategies
+    Kp, Wp = 16, 64
+    rng = np.random.default_rng(0)
+    Cp = rng.random((Wp, Kp)) < 0.2
+    grants = (rng.integers(1, 4, Cp.shape) * Cp).astype(np.int32)
+    assign = np.where(Cp, rng.integers(0, 3, Cp.shape), -1).astype(np.int32)
+    bp = LinkBudget(visible=Cp, served=Cp, assign=assign, grants=grants,
+                    need_up=2, need_dn=1)
+    alive_trace = fault_trace(FaultConfig(), Wp, K=Kp, num_stations=3)
+    M = max(2, Kp // 8)
+    parity = True
+    t_none = t_alive = 0.0
+    for budget in (None, bp):
+        e0, r0, t0 = _isl_run(Cp, make_scheduler("fedbuff", M=M),
+                              windows=Wp, budget=budget)
+        t_none += t0
+        for fast in (True, False):
+            e1, r1, t1 = _isl_run(Cp, make_scheduler("fedbuff", M=M),
+                                  windows=Wp, budget=budget, fast=fast,
+                                  faults=alive_trace)
+            parity = parity and _same_trajectory(e0, e1, r0, r1)
+            if budget is not None:
+                parity = parity and np.array_equal(e0.transfer_progress,
+                                                   e1.transfer_progress)
+            if fast:
+                t_alive += t1
+    print(f"faults: all-alive gate none {t_none:.3f}s, traced "
+          f"{t_alive:.3f}s, trajectory_identical={bool(parity)}",
+          flush=True)
+    out = {
+        "gate_K": Kp, "gate_windows": Wp,
+        "t_none_runs_s": t_none,
+        "t_all_alive_runs_s": t_alive,
+        "all_alive_trajectory_identical": bool(parity),
+    }
+    if smoke:
+        return out
+
+    # (b) degradation study: starlink40 over dense12 under blind faults.
+    # The schedulers plan on the clean connectivity the search was promised
+    # (§3.1's determinism premise) while the engine executes the faulted
+    # world — the curves measure how gracefully each policy degrades when
+    # that premise breaks. Churn fractions share one seed so the fault
+    # sets nest and the curves are comparable.
+    spec = constellation_preset("starlink40")
+    days = 2.0
+    W = int(days * 96)
+    G = len(spec.ground_stations)
+    K = spec.num_satellites
+    budget = link_budget(spec, days=days, uplink_mbps=20.0,
+                         downlink_mbps=100.0, model_mb=600.0,
+                         gs_capacity=2)
+    runtime = ISL.build_isl(spec, ISL.ISLConfig(isl_mbps=100.0,
+                                                model_mb=600.0, epoch=24))
+    reach = ISL.reachable_count(runtime.topology, budget.served[:W])
+    M_study = max(2, reach // 4)
+    rf = _fit_search_regressor()
+    sched_fns = {
+        "sync": lambda: make_scheduler("sync"),
+        "fedbuff": lambda: make_scheduler("fedbuff", M=M_study),
+        "fedspace": lambda: make_scheduler(
+            "fedspace", regressor=rf, I0=24, n_min=4, n_max=8,
+            num_candidates=512, seed=0),
+        "intra_plane": lambda: make_scheduler("intra_plane", M=M_study),
+    }
+    scenarios = {
+        "clean": None,
+        "churn20": FaultConfig(deorbit=random_churn(K, W, 0.20, seed=0)),
+        "churn40": FaultConfig(deorbit=random_churn(K, W, 0.40, seed=0)),
+        "blackout": FaultConfig(
+            outages=station_blackout(G, W // 3, 2 * W // 3)),
+        "weather": FaultConfig(rate_scale_min=0.25, rate_scale_max=1.0,
+                               seed=1),
+    }
+    traces = {n: None if c is None
+              else fault_trace(c, W, K=K, num_stations=G)
+              for n, c in scenarios.items()}
+    cells = {}
+    for sname, make in sched_fns.items():
+        cells[sname] = {}
+        for scen, trace in traces.items():
+            eng, res, t = _isl_run(budget.served, make(), windows=W,
+                                   isl=runtime, budget=budget,
+                                   faults=trace)
+            hist = res.staleness_hist
+            n_agg = int(hist.sum())
+            cells[sname][scen] = {
+                "idle_fraction": res.idle_connections
+                / max(res.total_connections, 1),
+                "total_connections": res.total_connections,
+                "global_updates": res.num_global_updates,
+                "aggregated_gradients": res.num_aggregated_gradients,
+                "mean_staleness": float(
+                    (hist * np.arange(len(hist))).sum() / max(n_agg, 1)),
+                "t_run_s": t,
+            }
+        curve = " ".join(
+            f"{scen}={c['aggregated_gradients']}"
+            for scen, c in cells[sname].items())
+        print(f"faults {sname}: agg_gradients {curve}", flush=True)
+
+    def agg(s, scen):
+        return cells[s][scen]["aggregated_gradients"]
+
+    degradation = bool(all(
+        agg(s, "churn40") < agg(s, "clean")
+        for s in ("fedbuff", "fedspace")))
+    out.update({
+        "study_preset": "starlink40", "study_ground": "dense12",
+        "study_windows": W, "study_M": M_study,
+        "churn_fractions": [0.0, 0.2, 0.4],
+        "blackout_windows": [W // 3, 2 * W // 3],
+        "study_cells": cells,
+        "degradation_observed": degradation,
+    })
+    return out
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -891,24 +1046,46 @@ def main() -> None:
                     help="output JSON path (default: repo-root "
                          "BENCH_hotpaths.json, or BENCH_hotpaths.smoke.json "
                          "with --smoke)")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of registered sections to "
+                         "run (e.g. --sections faults,isl); other sections' "
+                         "entries are preserved from the existing report")
     args = ap.parse_args()
 
     out_path = args.out or os.path.join(
         _ROOT, "BENCH_hotpaths.smoke.json" if args.smoke
         else "BENCH_hotpaths.json")
 
+    selected = SECTIONS
+    if args.sections:
+        names = [n for n in args.sections.split(",") if n]
+        unknown = [n for n in names if n not in SECTIONS]
+        if unknown:
+            raise SystemExit(f"unknown sections {unknown}; registered: "
+                             f"{sorted(SECTIONS)}")
+        selected = {n: SECTIONS[n] for n in names}
+
     t0 = time.time()
-    print(f"# hot-path benchmark (smoke={args.smoke}) on "
-          f"{jax.default_backend()}", flush=True)
-    result = {"meta": {
+    print(f"# hot-path benchmark (smoke={args.smoke}, sections="
+          f"{','.join(selected)}) on {jax.default_backend()}", flush=True)
+    result = {}
+    if args.sections and os.path.exists(out_path):
+        # subset run: keep the other sections' entries from the existing
+        # report so the file stays complete
+        try:
+            with open(out_path) as f:
+                result = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            result = {}
+    result["meta"] = {
         "smoke": args.smoke,
         "date": time.strftime("%Y-%m-%d"),
         "platform": platform.platform(),
         "python": platform.python_version(),
         "jax": jax.__version__,
         "backend": jax.default_backend(),
-    }}
-    for name, (fn, _) in SECTIONS.items():
+    }
+    for name, (fn, _) in selected.items():
         result[name] = fn(args.smoke)
     result["meta"]["bench_wall_s"] = round(time.time() - t0, 2)
 
@@ -917,13 +1094,13 @@ def main() -> None:
         f.write("\n")
     print(f"# wrote {out_path} ({result['meta']['bench_wall_s']}s total)")
 
-    # registered sections cannot rot by omission: every one must have
-    # produced a report entry, and every parity verdict must hold
-    missing = [n for n in SECTIONS
+    # registered sections cannot rot by omission: every selected one must
+    # have produced a report entry, and every parity verdict must hold
+    missing = [n for n in selected
                if n not in result or result[n] is None]
     if missing:
         raise SystemExit(f"benchmark sections silently skipped: {missing}")
-    violations = [n for n, (_, parity) in SECTIONS.items()
+    violations = [n for n, (_, parity) in selected.items()
                   if parity is not None and not parity(result[n])]
     if violations:
         raise SystemExit(f"parity violation in {violations} — see JSON "

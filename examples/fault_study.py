@@ -1,0 +1,104 @@
+"""Robustness study: how gracefully does each scheduler degrade when the
+world stops cooperating?
+
+FedSpace plans on *deterministic* connectivity (§3.1). This study breaks
+that premise the three ways production constellations do — satellites
+deorbit mid-run (escalating churn), the whole ground network goes dark
+for a stretch (blackout), and weather scales the link rates (degraded
+passes) — and races sync / fedbuff / FedSpace / intra-plane sinks over
+the same faulted worlds. Faults are *blind* by default: the schedulers
+and the schedule search plan on the clean world while the engine
+executes the faulted one, so the curves measure policy robustness, not
+replanning. The final block flips FedSpace to the `oracle` view
+(planning sees the faults) to show what perfect fault knowledge buys.
+
+Each scenario builds ONE world (`Federation.from_experiment`) and shares
+it across all policies via `Federation.with_scheduler` — constellation,
+data, adapter, ISL topology, and the resolved fault trace are identical,
+so differences are pure policy.
+
+    PYTHONPATH=src python examples/fault_study.py
+"""
+import dataclasses
+import time
+
+from repro.core.faults import random_churn, station_blackout
+from repro.fl.api import (ConstellationConfig, DatasetConfig, FaultConfig,
+                          FLExperiment, Federation, ISLConfig, LinkConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig
+
+K, G, WINDOWS = 40, 12, 192          # starlink40 over dense12, 2 days
+
+SCHEDULERS = [
+    SchedulerConfig("sync"),
+    SchedulerConfig("fedbuff", params={"M": 10}),
+    SchedulerConfig("fedspace",
+                    params={"I0": 24, "n_min": 4, "n_max": 8,
+                            "num_candidates": 512},
+                    setup={"pretrain_rounds": 10, "clients_per_round": 12,
+                           "utility_samples": 60, "local_steps": 8,
+                           "client_lr": 1.0}),
+    SchedulerConfig("intra_plane", params={"M": 10}),
+]
+
+SCENARIOS = [
+    ("clean", FaultConfig()),
+    ("churn20", FaultConfig(deorbit=random_churn(K, WINDOWS, 0.20, seed=0))),
+    ("churn40", FaultConfig(deorbit=random_churn(K, WINDOWS, 0.40, seed=0))),
+    ("blackout", FaultConfig(outages=station_blackout(G, 64, 128))),
+    ("weather", FaultConfig(rate_scale_min=0.25, rate_scale_max=1.0,
+                            seed=1)),
+]
+
+
+def _row(scenario, res):
+    idle = 100.0 * res.idle_connections / max(res.total_connections, 1)
+    hist = res.staleness_hist
+    n_agg = max(int(hist.sum()), 1)
+    stale = sum(s * int(n) for s, n in enumerate(hist)) / n_agg
+    return (f"{scenario:9s} {res.scheme:12s} {idle:6.1f} "
+            f"{res.num_global_updates:4d} "
+            f"{res.num_aggregated_gradients:6d} {stale:6.2f} "
+            f"{res.accuracy[-1]:6.3f}")
+
+
+def main():
+    base = FLExperiment(
+        name="fault_study",
+        constellation=ConstellationConfig(preset="starlink40",
+                                          ground="dense12", days=2.0),
+        dataset=DatasetConfig(num_train=4000, num_val=800, noise=2.2),
+        scheduler=SchedulerConfig(kind="fedbuff", params={"M": 10}),
+        train=EngineConfig(local_steps=8, client_lr=1.0, eval_every=48,
+                           max_windows=WINDOWS),
+        link=LinkConfig(uplink_mbps=20.0, downlink_mbps=100.0,
+                        model_mb=600.0, gs_capacity=2),
+        isl=ISLConfig(isl_mbps=100.0, model_mb=600.0, epoch=24),
+    )
+
+    print(f"{'scenario':9s} {'scheme':12s} {'idle%':>6s} {'upd':>4s} "
+          f"{'grads':>6s} {'stale':>6s} {'final':>6s}")
+    for scenario, faults in SCENARIOS:
+        world = Federation.from_experiment(
+            dataclasses.replace(base, faults=faults))
+        for cfg in SCHEDULERS:
+            t0 = time.time()
+            res = world.with_scheduler(cfg).run()
+            print(f"{_row(scenario, res)}  ({time.time() - t0:.0f}s)")
+
+    # what would perfect fault knowledge buy? FedSpace re-planned against
+    # the *faulted* connectivity (oracle) vs the clean plan above (blind)
+    print("\nfedspace under churn40, blind vs oracle planning:")
+    for label, oracle in (("blind", False), ("oracle", True)):
+        faults = FaultConfig(
+            deorbit=random_churn(K, WINDOWS, 0.40, seed=0), oracle=oracle)
+        world = Federation.from_experiment(
+            dataclasses.replace(base, faults=faults))
+        t0 = time.time()
+        res = world.with_scheduler(SCHEDULERS[2]).run()
+        print(f"{_row(label, res)}  ({time.time() - t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ regimes mega-constellation FL work (Matthiesen et al. 2022, Razmi et al.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -402,15 +402,21 @@ def transfer_windows(rate_mbps: float, size_mb: float,
 def link_budget(spec: ConstellationSpec, *, days: float,
                 uplink_mbps: float = 0.0, downlink_mbps: float = 0.0,
                 model_mb: float = 0.0, gs_capacity: int = 0,
-                t0_s: float = 900.0, substep_s: float = 60.0) -> LinkBudget:
+                t0_s: float = 900.0, substep_s: float = 60.0,
+                counts: Optional[np.ndarray] = None) -> LinkBudget:
     """Derive the capacity-resolved transfer layer for a constellation:
     station-level contact times (`station_windows`), deterministic
     contention (`resolve_contention`), and the per-direction unit needs
     (`transfer_windows`). The zero sentinels (rates/model size 0 =
     instantaneous, capacity 0 = unlimited) degrade each constraint
-    independently; with all of them zero the budget gates nothing."""
-    counts = station_windows(spec, t0_s=t0_s, days=days,
-                             substep_s=substep_s)
+    independently; with all of them zero the budget gates nothing.
+
+    `counts` accepts a precomputed `station_windows` result (callers that
+    also need the per-station counts — e.g. the fault layer's station-up
+    reach mask — propagate once and share the array)."""
+    if counts is None:
+        counts = station_windows(spec, t0_s=t0_s, days=days,
+                                 substep_s=substep_s)
     assign = resolve_contention(counts, gs_capacity)
     served = assign >= 0
     grants = np.where(

@@ -65,6 +65,17 @@ class ISLConfig:
     cross_plane: bool = False  # grid links to adjacent planes (gossip)
     epoch: int = 24            # sink re-election period, windows
 
+    def __post_init__(self):
+        if self.isl_mbps < 0:
+            raise ValueError(
+                f"ISLConfig.isl_mbps must be >= 0, got {self.isl_mbps}")
+        if self.model_mb < 0:
+            raise ValueError(
+                f"ISLConfig.model_mb must be >= 0, got {self.model_mb}")
+        if int(self.epoch) < 1:
+            raise ValueError(
+                f"ISLConfig.epoch must be >= 1, got {self.epoch}")
+
     @property
     def relay_windows(self) -> int:
         """Windows one ring hop takes (0 = instantaneous sentinel)."""
@@ -200,12 +211,14 @@ class ISL:
     epoch: int = 24
     cross_plane: bool = False
 
-    def sink_plan(self, C_epoch: np.ndarray):
+    def sink_plan(self, C_epoch: np.ndarray, *, alive=None):
         """Sinks and per-satellite hop needs for one election epoch:
         returns ``(sink (K,), need_hops (K,))`` from the epoch's effective
         connectivity slice (`elect_sinks` + ring distances scaled by the
-        hop latency; instantaneous hops need 0)."""
-        sink = elect_sinks(C_epoch, self.topology)
+        hop latency; instantaneous hops need 0). `alive` (fault runs)
+        restricts the election to satellites alive at some point in the
+        epoch — a deorbited member must not be elected sink."""
+        sink = elect_sinks(C_epoch, self.topology, alive=alive)
         need = self.topology.ring_distance(sink) * self.relay_windows
         return sink, need.astype(np.int32)
 
@@ -218,7 +231,8 @@ def build_isl(spec: ConstellationSpec, config: ISLConfig) -> ISL:
                cross_plane=config.cross_plane)
 
 
-def elect_sinks(C_epoch: np.ndarray, topo: ISLTopology) -> np.ndarray:
+def elect_sinks(C_epoch: np.ndarray, topo: ISLTopology, *,
+                alive=None) -> np.ndarray:
     """Per-plane sink election (2302.13447 §III): the member whose next
     ground contact in the epoch comes earliest wins; ties go to the member
     with the most contact windows in the epoch, then the lowest satellite
@@ -229,6 +243,9 @@ def elect_sinks(C_epoch: np.ndarray, topo: ISLTopology) -> np.ndarray:
     Args:
       C_epoch: (W, K) bool — the epoch's (effective) connectivity slice.
       topo: the ring topology whose `plane` grouping scopes the election.
+      alive: optional (K,) bool candidate mask (`repro.core.faults`):
+        dead satellites are never elected; an all-dead plane falls back to
+        the full membership (its election is moot — no member can act).
 
     Returns (K,) int32: each satellite's elected sink (same plane always).
     """
@@ -238,9 +255,13 @@ def elect_sinks(C_epoch: np.ndarray, topo: ISLTopology) -> np.ndarray:
     first = np.where(has, C_epoch.argmax(axis=0), W)     # W = "never"
     total = C_epoch.sum(axis=0)
     sink = np.empty(topo.plane.shape[0], np.int32)
+    alive = None if alive is None else np.asarray(alive, bool)
     for p in np.unique(topo.plane):
         m = np.flatnonzero(topo.plane == p)
-        best = m[np.lexsort((m, -total[m], first[m]))][0]
+        cand = m if alive is None else m[alive[m]]
+        if cand.size == 0:
+            cand = m
+        best = cand[np.lexsort((cand, -total[cand], first[cand]))][0]
         sink[m] = best
     return sink
 
@@ -286,7 +307,8 @@ def sink_connectivity(conn, sink, arrived, pending):
     return conn[sink] & (arrived | (pending < 0))
 
 
-def gossip_step(state: SS.SatState, nxt, prv, left, right, do_hop):
+def gossip_step(state: SS.SatState, nxt, prv, left, right, do_hop,
+                alive=None):
     """One asynchronous intra-ring gossip exchange (2206.00307): each
     satellite looks at its ring neighbours (and grid neighbours, which are
     self-loops unless cross-plane links are configured) and, when `do_hop`
@@ -298,11 +320,19 @@ def gossip_step(state: SS.SatState, nxt, prv, left, right, do_hop):
     version/pending/staleness bookkeeping), so the transition tracks
     propagation, which is what staleness/idleness accounting needs.
 
+    `alive` (fault runs, (K,) bool) removes dead satellites from the
+    exchange entirely: they offer nothing to their neighbours (their
+    version reads as -1, below any live version) and adopt nothing
+    themselves. `alive=None` compiles the exact prior program.
+
     Returns ``(state, adopted)`` with the adoption mask."""
     v = state.version
-    nbv = jnp.maximum(jnp.maximum(v[nxt], v[prv]),
-                      jnp.maximum(v[left], v[right]))
+    vn = v if alive is None else jnp.where(alive, v, SS._m1(v))
+    nbv = jnp.maximum(jnp.maximum(vn[nxt], vn[prv]),
+                      jnp.maximum(vn[left], vn[right]))
     adopted = do_hop & (nbv > v)
+    if alive is not None:
+        adopted = adopted & alive
     return state._replace(version=jnp.where(adopted, nbv, v),
                           pending=jnp.where(adopted, nbv, state.pending)), \
         adopted

@@ -100,7 +100,8 @@ class Scheduler:
         raise NotImplementedError
 
     def device_plan(self, i: int, *, K: int, state: SS.SatState, ig: int,
-                    connectivity: np.ndarray, status: float, link=None):
+                    connectivity: np.ndarray, status: float, link=None,
+                    **_):
         """Fast-path hook for the device-resident engine: return
         ``(indicator_fn, args, horizon)`` where ``indicator_fn(t, n_buf,
         args) -> bool`` is jnp-traceable and decides a^t (t absolute window
@@ -127,6 +128,16 @@ class Scheduler:
         `link` mirrors the `decide` kwarg (run-level LinkGate or None);
         the returned indicator itself needs no gating — the engine's scan
         applies the gate inside the shared upload/download transitions.
+
+        Under *blind* fault injection (`repro.core.faults`) the
+        `connectivity`/`link` the scheduler receives are the clean
+        **plan view**, while the run executes on fault-masked artifacts;
+        the engine then additionally passes `exec_connectivity` /
+        `exec_link` keyword args (hence the `**_` tolerance here) so
+        schedulers that simulate the boundary window's upload (FedSpace)
+        can replicate what the engine actually executed. Under an oracle
+        trace — or without faults — plan and exec views are the same
+        objects.
         """
         return None
 
@@ -290,16 +301,24 @@ class FedSpaceScheduler(Scheduler):
         return a and n_in_buffer > 0
 
     def device_plan(self, i, *, K, state, ig, connectivity, status,
-                    link=None, **_):
+                    link=None, exec_connectivity=None, exec_link=None, **_):
         if i % self.I0 == 0 or self._schedule is None:
             # `decide` runs after the engine's upload step; replicate that
             # here so the search scores the identical post-upload state
             # (the scan recomputes this upload — one extra dispatch per
-            # re-plan, amortized over I0 windows)
-            conn = jnp.asarray(np.asarray(connectivity[i], bool))
-            gate = None if link is None else SS.LinkGate(
-                jnp.asarray(np.asarray(link.grant[i]), jnp.int32),
-                jnp.int32(link.need_up), jnp.int32(link.need_dn))
+            # re-plan, amortized over I0 windows). Under blind fault
+            # injection the engine's upload runs on the *executed*
+            # fault-masked world (exec_connectivity/exec_link), so the
+            # boundary simulation must too — that hands `_ensure_schedule`
+            # the same post-upload state the host loop's `decide` sees —
+            # while the search itself keeps planning on the clean view.
+            bc = connectivity if exec_connectivity is None \
+                else exec_connectivity
+            bl = link if exec_connectivity is None else exec_link
+            conn = jnp.asarray(np.asarray(bc[i], bool))
+            gate = None if bl is None else SS.LinkGate(
+                jnp.asarray(np.asarray(bl.grant[i]), jnp.int32),
+                jnp.int32(bl.need_up), jnp.int32(bl.need_dn))
             state, _ = SS.upload_step(state, jnp.int32(ig), conn, gate)
             self._ensure_schedule(i, state=state, ig=ig,
                                   connectivity=connectivity, status=status,

@@ -13,6 +13,12 @@ Protocol semantics (Algorithm 1 + Appendix A):
 
 `simulate_window` is pure JAX and vmappable over candidate schedules — it is
 the inner loop of the FedSpace random search (eq. 13).
+
+Fault injection (`repro.core.faults`) composes with these transitions from
+the outside: the engine masks the connectivity/grant artifacts they consume
+and applies `repro.core.faults.fault_reset` (re-entry of recovered
+satellites as "never received") between windows, so no transition here
+needs a fault branch and fault-free runs compile the exact same programs.
 """
 from __future__ import annotations
 

@@ -38,6 +38,7 @@ from typing import Dict, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import connectivity as CN
+from repro.core.faults import FaultConfig, fault_trace
 from repro.core.isl import ISLConfig, build_isl
 from repro.data.fmow import FmowSpec, SyntheticFmow
 from repro.data.partition import iid_partition, noniid_partition
@@ -49,7 +50,7 @@ from repro.fl.registry import (ADAPTERS, PARTITIONS, SCHEDULERS,
 
 __all__ = ["ConstellationConfig", "DatasetConfig", "PartitionConfig",
            "AdapterConfig", "SchedulerConfig", "LinkConfig", "ISLConfig",
-           "FLExperiment", "Federation"]
+           "FaultConfig", "FLExperiment", "Federation"]
 
 
 # --------------------------------------------------------------------------
@@ -161,6 +162,13 @@ class LinkConfig:
     model_mb: float = 0.0         # model transfer size; 0 = instantaneous
     gs_capacity: int = 0          # concurrent contacts/station; 0 = no cap
 
+    def __post_init__(self):
+        for name in ("uplink_topk", "uplink_mbps", "downlink_mbps",
+                     "model_mb", "gs_capacity"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(f"LinkConfig.{name} must be >= 0, got {v}")
+
     @property
     def constrained(self) -> bool:
         """True when any field makes links non-instantaneous or contended
@@ -197,6 +205,14 @@ class FLExperiment:
     # an `isl_mode` (the "intra_plane" / "isl_async" schedulers), so one
     # ISL-configured world serves with/without-ISL scheduler comparisons.
     isl: Optional[ISLConfig] = None
+    # optional fault-injection layer (repro.core.faults.FaultConfig):
+    # satellite churn, station outages, weather-degraded links. Resolved
+    # to a deterministic per-window FaultTrace against this constellation
+    # and horizon by `Federation.from_experiment` (shared by
+    # `with_scheduler` clones, so scheduler comparisons degrade under one
+    # identical fault world); None — or a trivial config — keeps every
+    # run bit-identical to previous releases.
+    faults: Optional[FaultConfig] = None
     seed: int = 0
 
     def describe(self) -> dict:
@@ -231,7 +247,7 @@ class Federation:
     def __init__(self, *, experiment: FLExperiment, spec, C: np.ndarray,
                  data, adapter, scheduler=None,
                  scheduler_diag: Optional[dict] = None,
-                 link_budget=None, isl=None,
+                 link_budget=None, isl=None, faults=None,
                  _regressor_cache: Optional[Dict] = None):
         self.experiment = experiment
         self.spec = spec
@@ -246,6 +262,9 @@ class Federation:
         # resolved repro.core.isl.ISL runtime when the experiment declares
         # an ISLConfig (None = satellites only talk to ground stations)
         self.isl = isl
+        # resolved repro.core.faults.FaultTrace when the experiment
+        # declares a non-trivial FaultConfig (None = fault-free world)
+        self.faults = faults
         # FedSpace phase-1 (regressor, diag) keyed by setup knobs, shared
         # across with_scheduler clones of this world
         self._regressor_cache: Dict = ({} if _regressor_cache is None
@@ -264,17 +283,34 @@ class Federation:
         comes from its `visible` matrix — bit-identical to
         `connectivity_sets` (tests/test_link_budget.py), so the orbital
         propagation sweep runs once, not twice."""
-        budget = None
+        budget = counts = None
+        fcfg = exp.faults
+        if fcfg is not None and fcfg.trivial:
+            fcfg = None           # trivial config == no faults at all
+        days = exp.constellation.days
         if exp.link.constrained:
             spec = exp.constellation.build_spec()
             lk = exp.link
+            if fcfg is not None:
+                # the fault trace needs the per-station contact counts
+                # (station-up reach); share one propagation sweep with
+                # the budget instead of running it twice
+                counts = CN.station_windows(spec, days=days)
             budget = CN.link_budget(
-                spec, days=exp.constellation.days,
+                spec, days=days,
                 uplink_mbps=lk.uplink_mbps, downlink_mbps=lk.downlink_mbps,
-                model_mb=lk.model_mb, gs_capacity=lk.gs_capacity)
+                model_mb=lk.model_mb, gs_capacity=lk.gs_capacity,
+                counts=counts)
             C = budget.visible
         else:
             spec, C = exp.constellation.build()
+            if fcfg is not None and fcfg.outages:
+                # station outages on the station-collapsed geometry path
+                # need per-station counts to know which contacts die
+                counts = CN.station_windows(spec, days=days)
+        faults = None if fcfg is None else fault_trace(
+            fcfg, C.shape[0], K=spec.num_satellites,
+            num_stations=len(spec.ground_stations), counts=counts)
         data = SyntheticFmow(exp.dataset.to_spec())
         pseed = exp.partition.seed if exp.partition.seed is not None \
             else exp.seed
@@ -286,7 +322,8 @@ class Federation:
                                  make_clients(parts), **exp.adapter.params)
         isl = build_isl(spec, exp.isl) if exp.isl is not None else None
         fed = cls(experiment=exp, spec=spec, C=C, data=data,
-                  adapter=adapter, link_budget=budget, isl=isl)
+                  adapter=adapter, link_budget=budget, isl=isl,
+                  faults=faults)
         fed.scheduler, diag = fed._build_scheduler(exp)
         fed.scheduler_diag = diag
         return fed
@@ -333,6 +370,7 @@ class Federation:
         fed = Federation(experiment=exp, spec=self.spec, C=self.C,
                          data=self.data, adapter=self.adapter,
                          link_budget=self.link_budget, isl=self.isl,
+                         faults=self.faults,
                          _regressor_cache=self._regressor_cache)
         fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
         return fed
@@ -355,7 +393,7 @@ class Federation:
                                 callbacks=callbacks,
                                 init_params=init_params,
                                 link_budget=self.link_budget,
-                                isl=self.isl)
+                                isl=self.isl, faults=self.faults)
 
     def run(self, *, callbacks: Sequence = (),
             init_params=None) -> SimResult:

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.checkpoint import DeviceCheckpointStore
+from repro.core import faults as FT
 from repro.core import isl as ISL
 from repro.core import staleness as SS
 from repro.core.aggregation import aggregation_weights
@@ -96,35 +97,44 @@ def _sink_gate(gate, sink):
 
 
 @jax.jit
-def _isl_upload(state, ig, conn, gate, sink, need):
+def _isl_upload(state, ig, conn, gate, sink, need, alive=None):
     """Sink-relay upload transition (host loop): advance the ring relay
     one window, then run the shared `upload_step` on sink-indexed
     effective connectivity — a member uploads once its update has hopped
     to its plane's sink and the sink has a (served, grant-sufficient)
-    contact."""
+    contact. `alive` (fault runs) removes dead satellites from the
+    sink-routed path — a dead member must not ride its sink's contact."""
     state, arrived = ISL.relay_step(state, need)
     eff = ISL.sink_connectivity(conn, sink, arrived, state.pending)
+    if alive is not None:
+        eff = eff & alive
     state, info = SS.upload_step(state, ig, eff, _sink_gate(gate, sink))
     return state, jnp.stack([info["n_connected"], info["n_idle"],
                              info["n_buffered"]])
 
 
 @jax.jit
-def _isl_download(state, ig, conn, gate, sink, need):
+def _isl_download(state, ig, conn, gate, sink, need, alive=None):
     """Sink-relay download transition (host loop): the plane fetches the
     global model through the sink's contact (no relay advance — uploads
     advanced it this window already); satellites starting a fresh round
     reset their relay counter."""
     arrived = state.relay >= need
     eff = ISL.sink_connectivity(conn, sink, arrived, state.pending)
+    if alive is not None:
+        eff = eff & alive
     state, dn = SS.download_step(state, ig, eff, _sink_gate(gate, sink))
     return ISL.reset_relay(state, dn["downloads"])
 
 
 @jax.jit
-def _gossip(state, nxt, prv, left, right, do_hop):
-    state, _ = ISL.gossip_step(state, nxt, prv, left, right, do_hop)
+def _gossip(state, nxt, prv, left, right, do_hop, alive=None):
+    state, _ = ISL.gossip_step(state, nxt, prv, left, right, do_hop,
+                               alive=alive)
     return state
+
+
+_fault_reset = jax.jit(FT.fault_reset)
 
 
 def _tree_where(pred, a, b):
@@ -134,7 +144,8 @@ def _tree_where(pred, a, b):
 @functools.partial(jax.jit, static_argnames=("indicator", "horizon",
                                              "isl_mode"))
 def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
-                  isl_dev=None, *, indicator, horizon, isl_mode=None):
+                  isl_dev=None, faults_dev=None, *, indicator, horizon,
+                  isl_mode=None):
     """Advance the protocol over up to `horizon` windows starting at
     absolute window i0, freezing at the first window whose aggregation
     indicator fires (post-upload, pre-aggregation — the engine trains and
@@ -156,43 +167,62 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
     version-exchange before each window's upload. ``None`` (the default)
     compiles the exact ground-only program of previous releases.
 
+    `faults_dev` is None (no fault injection — the exact prior program)
+    or ``(revive_dev, alive_dev)`` padded device masks: each window first
+    applies `repro.core.faults.fault_reset` to reviving satellites (forced
+    re-download on re-entry), and the alive mask additionally gates the
+    ISL paths (dead satellites neither gossip nor ride their sink's
+    contact — plain connectivity is already masked in `C_dev` by the
+    engine).
+
     Returns (state, counters (horizon, 4) int32) with per-window
     [n_connected, n_idle, n_buffered, a]; counter rows after the event row
     are garbage the caller must ignore.
     """
-    Cw = jax.lax.dynamic_slice_in_dim(C_dev, i0, horizon, axis=0)
-    ts = i0 + jnp.arange(horizon)
-    if link_dev is None:
-        xs = (ts, Cw)
-    else:
+    xs = {"t": i0 + jnp.arange(horizon),
+          "conn": jax.lax.dynamic_slice_in_dim(C_dev, i0, horizon, axis=0)}
+    if link_dev is not None:
         G_dev, need_up, need_dn = link_dev
-        xs = (ts, Cw,
-              jax.lax.dynamic_slice_in_dim(G_dev, i0, horizon, axis=0))
+        xs["grant"] = jax.lax.dynamic_slice_in_dim(G_dev, i0, horizon,
+                                                   axis=0)
+    if faults_dev is not None:
+        R_dev, A_dev = faults_dev
+        xs["revive"] = jax.lax.dynamic_slice_in_dim(R_dev, i0, horizon,
+                                                    axis=0)
+        xs["alive"] = jax.lax.dynamic_slice_in_dim(A_dev, i0, horizon,
+                                                   axis=0)
 
     def body(carry, inp):
         st, done = carry
-        t, conn = inp[0], inp[1]
+        t, conn = inp["t"], inp["conn"]
         gate = None if link_dev is None \
-            else SS.LinkGate(inp[2], need_up, need_dn)
+            else SS.LinkGate(inp["grant"], need_up, need_dn)
         live = (~done) & (t - i0 < n_valid)
+        alive = inp["alive"] if faults_dev is not None else None
+        stf = st if faults_dev is None else FT.fault_reset(st,
+                                                           inp["revive"])
         if isl_mode == "sink":
             sink, need = isl_dev
-            st2, arrived = ISL.relay_step(st, need)
+            st2, arrived = ISL.relay_step(stf, need)
             up_conn = ISL.sink_connectivity(conn, sink, arrived,
                                             st2.pending)
+            if alive is not None:
+                up_conn = up_conn & alive
             gate = _sink_gate(gate, sink)
             up_st, info = SS.upload_step(st2, ig, up_conn, gate)
             dn_conn = ISL.sink_connectivity(conn, sink, arrived,
                                             up_st.pending)
+            if alive is not None:
+                dn_conn = dn_conn & alive
         elif isl_mode == "gossip":
             g_nxt, g_prv, g_left, g_right, period = isl_dev
             do_hop = (period <= 1) | (t % period == 0)
-            st2, _ = ISL.gossip_step(st, g_nxt, g_prv, g_left, g_right,
-                                     do_hop)
+            st2, _ = ISL.gossip_step(stf, g_nxt, g_prv, g_left, g_right,
+                                     do_hop, alive=alive)
             up_st, info = SS.upload_step(st2, ig, conn, gate)
             dn_conn = conn
         else:
-            up_st, info = SS.upload_step(st, ig, conn, gate)
+            up_st, info = SS.upload_step(stf, ig, conn, gate)
             dn_conn = conn
         n_buf = info["n_buffered"]
         a = live & indicator(t, n_buf, ind_args) & (n_buf > 0)
@@ -323,12 +353,23 @@ class SimulationEngine:
         the unmodified protocol, so with/without-ISL comparisons share one
         world. `isl=None` (default) leaves every code path bit-identical
         to previous releases.
+      faults: optional `repro.core.faults.FaultTrace` (resolved by
+        `Federation.from_experiment` from `FLExperiment.faults`). The
+        engine then *executes* on the fault-masked artifacts — dead
+        satellites lose every contact (and ISL participation), grants are
+        weather-rescaled, reviving satellites re-enter through
+        `fault_reset`'s forced re-download — while schedulers *plan* on
+        the clean connectivity/link view unless the trace is `oracle`
+        (the blind/oracle split that measures how each policy degrades
+        when its plan is wrong). `faults=None` (default) keeps every
+        compiled program and trajectory bit-identical to previous
+        releases.
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
                  config: Optional[EngineConfig] = None, *,
                  callbacks: Sequence = (), init_params=None,
-                 link_budget=None, isl=None, **overrides):
+                 link_budget=None, isl=None, faults=None, **overrides):
         cfg = config if config is not None else EngineConfig()
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
@@ -339,10 +380,12 @@ class SimulationEngine:
         self.config = cfg
         self.link_budget = link_budget
         self.isl = isl
-        grants = None
+        self.faults = faults
+        grants = assign = None
         if link_budget is not None:
             C = link_budget.served
             grants = np.asarray(link_budget.grants, np.int32)
+            assign = np.asarray(link_budget.assign, np.int32)
         repeat = cfg.repeat_connectivity
         if repeat == 0:    # auto: tile C up to the requested horizon
             need = cfg.max_windows or C.shape[0]
@@ -351,8 +394,24 @@ class SimulationEngine:
             C = np.concatenate([C] * repeat, axis=0)
             if grants is not None:
                 grants = np.concatenate([grants] * repeat, axis=0)
-        self.C = np.asarray(C, bool)
-        self._grants = grants
+                assign = np.concatenate([assign] * repeat, axis=0)
+        C = np.asarray(C, bool)
+        # plan view (what schedulers see) vs executed view (what the run
+        # applies): the same objects without faults or under an oracle
+        # trace, clean-vs-masked under a blind one
+        self._plan_C, self._plan_grants = C, grants
+        self._trace = None if faults is None \
+            else faults.extended(C.shape[0])
+        if self._trace is None:
+            self.C, self._grants = C, grants
+        elif link_budget is not None:
+            self.C, self._grants = FT.mask_served(C, grants, assign,
+                                                  self._trace)
+        else:
+            self.C = C & self._trace.mask[:C.shape[0]]
+            self._grants = None
+        if self._trace is not None and self._trace.oracle:
+            self._plan_C, self._plan_grants = self.C, self._grants
         self.adapter = adapter
         self.scheduler = scheduler
         self.callbacks = list(callbacks)
@@ -442,11 +501,17 @@ class SimulationEngine:
             b = self.link_budget
             self._need_up = jnp.int32(b.need_up)
             self._need_dn = jnp.int32(b.need_dn)
-            # run-level gate handed to schedulers (host grants view)
+            # run-level gates handed to schedulers: exec grants drive the
+            # run; blind-fault runs plan on the clean grants view
             self._link = SS.LinkGate(self._grants, int(b.need_up),
                                      int(b.need_dn))
+            self._plan_link = self._link \
+                if self._plan_grants is self._grants \
+                else SS.LinkGate(self._plan_grants, int(b.need_up),
+                                 int(b.need_dn))
         else:
             self._link = None
+            self._plan_link = None
         self._fast_ok = cfg.fast_loop and all(
             getattr(type(self), m) is getattr(SimulationEngine, m)
             for m in ("on_uploads", "on_decide", "on_aggregate",
@@ -464,6 +529,21 @@ class SimulationEngine:
                 [self._grants[:self.num_windows],
                  np.zeros((_MAX_CHUNK, self.K), np.int32)]))
             self._link_dev = (G_dev, self._need_up, self._need_dn)
+        # fault masks: host rows feed the per-window host loop, padded
+        # device copies feed the scans (None everywhere without a trace)
+        self._faults_dev = None
+        if self._trace is None:
+            self._alive = self._revive = None
+        else:
+            self._alive = np.asarray(
+                self._trace.alive[:self.num_windows], bool)
+            self._revive = np.asarray(
+                self._trace.revive[:self.num_windows], bool)
+            if self._fast_ok:
+                pad = np.zeros((_MAX_CHUNK, self.K), bool)
+                self._faults_dev = (
+                    jnp.asarray(np.concatenate([self._revive, pad])),
+                    jnp.asarray(np.concatenate([self._alive, pad])))
         # ISL device state: sink elections are cached per epoch (sink
         # mode); the gossip neighbour arrays are run constants
         self._sink_cache = {}
@@ -539,7 +619,10 @@ class SimulationEngine:
         ep = self._isl.epoch
         e = i // ep
         if e not in self._sink_cache:
-            sink, need = self._isl.sink_plan(self.C[e * ep:(e + 1) * ep])
+            alive_e = None if self._alive is None else \
+                self._alive[e * ep:(e + 1) * ep].any(axis=0)
+            sink, need = self._isl.sink_plan(self.C[e * ep:(e + 1) * ep],
+                                             alive=alive_e)
             self._sink_cache[e] = (jnp.asarray(sink), jnp.asarray(need))
         return self._sink_cache[e]
 
@@ -547,9 +630,17 @@ class SimulationEngine:
         """Ask the scheduler for a device-side indicator valid from window
         i; clip the chunk to eval boundaries (where `status` changes) and
         the scan-size bucket cap. Returns (indicator, args, end) or None."""
+        if self._trace is not None:
+            # reviving satellites re-enter before planning (idempotent —
+            # the scan re-applies the same reset at this window)
+            self.state = _fault_reset(self.state,
+                                      jnp.asarray(self._revive[i]))
+        extra = {} if self._trace is None else {
+            "exec_connectivity": self.C, "exec_link": self._link}
         plan = self.scheduler.device_plan(
-            i, K=self.K, state=self.state, ig=self.ig, connectivity=self.C,
-            status=self.status, link=self._link)
+            i, K=self.K, state=self.state, ig=self.ig,
+            connectivity=self._plan_C, status=self.status,
+            link=self._plan_link, **extra)
         if plan is None:
             return None
         fn, args, horizon = plan
@@ -579,10 +670,12 @@ class SimulationEngine:
                 isl_dev = self._gossip_dev
             else:
                 isl_dev = None
+            prev_state = self.state
             self.state, counters = _scan_windows(
                 self.state, jnp.int32(self.ig), self._C_dev, jnp.int32(w),
-                jnp.int32(H), args, self._link_dev, isl_dev, indicator=fn,
-                horizon=bucket, isl_mode=self._isl_mode)
+                jnp.int32(H), args, self._link_dev, isl_dev,
+                self._faults_dev, indicator=fn, horizon=bucket,
+                isl_mode=self._isl_mode)
             counters = np.asarray(counters)
             advanced = H
             for j in range(H):
@@ -599,6 +692,18 @@ class SimulationEngine:
                     stop = self.evaluate(w + j)
                 self._emit("on_window_end", w + j)
                 if stop or self._stop_requested:
+                    if not a and j + 1 < H:
+                        # a stop mid-chunk: the scan already advanced the
+                        # state past this window — replay the prefix (no
+                        # event fired in it, so the rescan is an exact
+                        # deterministic replay) so the run freezes one
+                        # window after the request, not at the chunk end
+                        self.state, _ = _scan_windows(
+                            prev_state, jnp.int32(self.ig), self._C_dev,
+                            jnp.int32(w), jnp.int32(j + 1), args,
+                            self._link_dev, isl_dev, self._faults_dev,
+                            indicator=fn, horizon=bucket,
+                            isl_mode=self._isl_mode)
                     return w + j + 1, True
                 if a:        # scan froze at the event; rescan from w+j+1
                     advanced = j + 1
@@ -616,17 +721,22 @@ class SimulationEngine:
         occupancy."""
         res = self.result
         conn_dev = jnp.asarray(np.asarray(conn, bool))
+        alive = None
+        if self._trace is not None:
+            self.state = _fault_reset(self.state,
+                                      jnp.asarray(self._revive[i]))
+            alive = jnp.asarray(self._alive[i])
         if self._isl_mode == "sink":
             sink, need = self._sink_plan(i)
             self.state, counters = _isl_upload(
                 self.state, jnp.int32(self.ig), conn_dev, self._gate(i),
-                sink, need)
+                sink, need, alive)
         else:
             if self._isl_mode == "gossip":
                 per = int(self._gossip_dev[4])
                 self.state = _gossip(
                     self.state, *self._gossip_dev[:4],
-                    jnp.bool_(per <= 1 or i % per == 0))
+                    jnp.bool_(per <= 1 or i % per == 0), alive)
             self.state, counters = _upload(self.state, jnp.int32(self.ig),
                                            conn_dev, self._gate(i))
         n_conn, n_idle, n_buf = (int(x) for x in np.asarray(counters))
@@ -640,7 +750,8 @@ class SimulationEngine:
         host-array rebuild."""
         return self.scheduler.decide(
             i, n_in_buffer=n_buf, K=self.K, state=self.state, ig=self.ig,
-            connectivity=self.C, status=self.status, link=self._link)
+            connectivity=self._plan_C, status=self.status,
+            link=self._plan_link)
 
     def on_aggregate(self, i: int) -> None:
         """Apply the staleness-compensated buffered update (eq. 4).
@@ -760,8 +871,11 @@ class SimulationEngine:
         conn_dev = jnp.asarray(np.asarray(conn, bool))
         if self._isl_mode == "sink":
             sink, need = self._sink_plan(i)
+            alive = None if self._trace is None \
+                else jnp.asarray(self._alive[i])
             self.state = _isl_download(self.state, jnp.int32(self.ig),
-                                       conn_dev, self._gate(i), sink, need)
+                                       conn_dev, self._gate(i), sink, need,
+                                       alive)
         else:
             self.state = _download(self.state, jnp.int32(self.ig),
                                    conn_dev, self._gate(i))

@@ -47,6 +47,25 @@ def lists(elements, min_size=0, max_size=10):
     return _Strategy(_sample)
 
 
+def tuples(*elements):
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
+
+class _Data:
+    """Stand-in for the object `st.data()` hands to tests: `draw` samples
+    a strategy against the run's RNG (labels accepted and ignored)."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+def data():
+    return _Strategy(lambda rng: _Data(rng))
+
+
 def composite(fn):
     """`@st.composite def s(draw, ...): ...` -> calling s() returns a
     strategy that runs fn with a draw bound to the run's RNG."""
@@ -82,4 +101,4 @@ def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
 
 strategies = types.SimpleNamespace(
     integers=integers, floats=floats, booleans=booleans, lists=lists,
-    composite=composite)
+    tuples=tuples, data=data, composite=composite)

@@ -1,0 +1,141 @@
+"""`request_stop` granularity and callback consistency under mid-run
+interruption.
+
+The fast loop advances whole jitted chunks (up to 128 windows) on device
+before the per-window callbacks run on host; a stop requested from a
+callback must nevertheless freeze the run exactly one window later — the
+engine replays the chunk prefix to un-advance the state (see
+`SimulationEngine._run_chunk`). These tests pin that latency contract for
+both execution strategies, and check that the streaming callbacks
+(JSONL metrics, checkpoint store) are left consistent by an early stop:
+no torn/duplicate rows, run_end present, current checkpoint retrievable.
+"""
+import json
+
+import jax
+import numpy as np
+
+from repro.fl.callbacks import Callback, JsonlMetricsCallback
+from repro.fl.engine import EngineConfig, SimulationEngine
+from tests.test_protocol_lockstep import ScriptedScheduler, _StubAdapter
+
+
+class _StopAt(Callback):
+    def __init__(self, window):
+        self.window = window
+
+    def on_window_end(self, engine, i):
+        if i == self.window:
+            engine.request_stop()
+
+
+def _rng_world(I=96, K=6, seed=0):
+    rng = np.random.default_rng(seed)
+    C = rng.random((I, K)) < 0.3
+    a = (rng.random(I) < 0.15).astype(np.int32)
+    return C, a
+
+
+def _engine(C, a, *, fast, callbacks=(), max_windows=None):
+    I, K = C.shape
+    return SimulationEngine(
+        C, _StubAdapter(K), ScriptedScheduler(a, device=fast),
+        EngineConfig(eval_every=1000, fast_loop=fast,
+                     max_windows=max_windows), callbacks=list(callbacks))
+
+
+def test_stop_latency_is_one_window_both_strategies():
+    """A stop requested at window X mid-chunk leaves the engine in exactly
+    the state of a reference run over X+1 windows — not advanced to the
+    chunk boundary."""
+    C, a = _rng_world()
+    for stop_w in (0, 17, 37, 63):        # mid-chunk and boundary cases
+        ref = _engine(C, a, fast=True, max_windows=stop_w + 1)
+        ref.run()
+        for fast in (True, False):
+            eng = _engine(C, a, fast=fast, callbacks=[_StopAt(stop_w)])
+            res = eng.run()
+            assert res.windows_run == stop_w + 1, (fast, stop_w)
+            np.testing.assert_array_equal(eng.version, ref.version)
+            np.testing.assert_array_equal(eng.pending, ref.pending)
+            np.testing.assert_array_equal(eng.buffered_base,
+                                          ref.buffered_base)
+            assert eng.ig == ref.ig
+            assert res.total_connections == \
+                int(C[:stop_w + 1].sum()), (fast, stop_w)
+
+
+def test_stop_latency_with_faults_and_budget():
+    """The chunk-prefix replay composes with the fault masks and link
+    gating (the scan takes the same xs dict on the rescan)."""
+    from repro.core.faults import FaultConfig, fault_trace
+    from tests.test_protocol_lockstep import _budget
+
+    C, a = _rng_world(seed=3)
+    I, K = C.shape
+    grants = (np.random.default_rng(1).integers(1, 4, C.shape)
+              * C).astype(np.int32)
+    budget = _budget(C, grants, 2, 1)
+    trace = fault_trace(FaultConfig(deorbit=((1, 9),), launch=((1, 30),)),
+                        I, K=K)
+    stop_w = 41
+    ref = SimulationEngine(C, _StubAdapter(K), ScriptedScheduler(a),
+                           EngineConfig(eval_every=1000,
+                                        max_windows=stop_w + 1),
+                           link_budget=budget, faults=trace)
+    ref.run()
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=1000,
+                                            fast_loop=fast),
+                               callbacks=[_StopAt(stop_w)],
+                               link_budget=budget, faults=trace)
+        res = eng.run()
+        assert res.windows_run == stop_w + 1
+        np.testing.assert_array_equal(eng.version, ref.version)
+        np.testing.assert_array_equal(eng.pending, ref.pending)
+        np.testing.assert_array_equal(eng.transfer_progress,
+                                      ref.transfer_progress)
+        assert eng.ig == ref.ig
+
+
+def test_jsonl_stream_consistent_after_early_stop(tmp_path):
+    """An early stop must leave the JSONL stream well-formed: every line
+    parses, exactly one run_begin and one run_end, eval rows unique and
+    in window order (no torn or duplicated rows)."""
+    C, a = _rng_world()
+    for fast in (True, False):
+        path = tmp_path / f"metrics_{fast}.jsonl"
+        eng = SimulationEngine(
+            C, _StubAdapter(C.shape[1]), ScriptedScheduler(a, device=fast),
+            EngineConfig(eval_every=8, fast_loop=fast),
+            callbacks=[JsonlMetricsCallback(str(path)), _StopAt(43)])
+        res = eng.run()
+        assert res.windows_run == 44
+        rows = [json.loads(line)
+                for line in path.read_text().splitlines()]
+        events = [r["event"] for r in rows]
+        assert events[0] == "run_begin" and events[-1] == "run_end"
+        assert events.count("run_begin") == events.count("run_end") == 1
+        evals = [r["window"] for r in rows if r["event"] == "eval"]
+        # evals at 8-window boundaries up to (not past) the stop point
+        assert evals == [7, 15, 23, 31, 39]
+        summary = rows[-1]
+        assert summary["global_updates"] == res.num_global_updates
+
+
+def test_checkpoint_store_retrievable_after_early_stop():
+    """The device checkpoint ring stays consistent across an early stop:
+    the current global version is retrievable and equals the engine's
+    params under both strategies."""
+    C, a = _rng_world(seed=7)
+    for fast in (True, False):
+        eng = _engine(C, a, fast=fast, callbacks=[_StopAt(50)])
+        eng.run()
+        assert eng.ig > 0          # the scenario aggregated before the stop
+        stored = eng.store.get(eng.ig)
+        for got, want in zip(jax.tree.leaves(stored),
+                             jax.tree.leaves(eng.params)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))

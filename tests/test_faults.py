@@ -1,0 +1,458 @@
+"""Fault-injection layer tests (repro.core.faults): config validation,
+trace resolution semantics, the pure masking transforms, the `fault_reset`
+re-entry transition, and the engine-level contracts — `faults=None` (and a
+trivial all-alive trace) bit-identical to the fault-free protocol, fast
+and host execution strategies in lockstep under arbitrary churn, forced
+re-download on recovery, dead satellites excluded from ISL participation,
+and the blind/oracle scheduler plan-view split."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import faults as FT
+from repro.core import isl as ISL
+from repro.core import staleness as SS
+from repro.core.isl import ISLConfig
+from repro.fl.api import (ConstellationConfig, DatasetConfig, FaultConfig,
+                          Federation, FLExperiment, LinkConfig,
+                          SchedulerConfig)
+from repro.fl.engine import EngineConfig, SimulationEngine
+from tests.test_protocol_lockstep import (ScriptedScheduler, _budget,
+                                          _StubAdapter, _linked_scenario,
+                                          _scenario)
+
+
+# ---------------------------------------------------------------- validation
+
+
+@pytest.mark.parametrize("kw,field", [
+    (dict(deorbit=((-1, 3),)), "deorbit"),
+    (dict(deorbit=((2, -1),)), "deorbit"),
+    (dict(launch=((-2, 0),)), "launch"),
+    (dict(outages=((-1, 0, 4),)), "outages"),
+    (dict(outages=((0, 5, 2),)), "outages"),
+    (dict(rate_scale_min=-0.1), "rate_scale_min"),
+    (dict(rate_scale_min=0.9, rate_scale_max=0.5), "rate_scale_min"),
+    (dict(rate_block=0), "rate_block"),
+])
+def test_fault_config_validation_names_field(kw, field):
+    with pytest.raises(ValueError, match=f"FaultConfig.{field}"):
+        FaultConfig(**kw)
+
+
+@pytest.mark.parametrize("kw,field", [
+    (dict(uplink_topk=-0.5), "uplink_topk"),
+    (dict(uplink_mbps=-1.0), "uplink_mbps"),
+    (dict(downlink_mbps=-1.0), "downlink_mbps"),
+    (dict(model_mb=-3.0), "model_mb"),
+    (dict(gs_capacity=-1), "gs_capacity"),
+])
+def test_link_config_validation_names_field(kw, field):
+    with pytest.raises(ValueError, match=f"LinkConfig.{field}"):
+        LinkConfig(**kw)
+
+
+@pytest.mark.parametrize("kw,field", [
+    (dict(isl_mbps=-1.0), "isl_mbps"),
+    (dict(model_mb=-1.0), "model_mb"),
+    (dict(epoch=0), "epoch"),
+])
+def test_isl_config_validation_names_field(kw, field):
+    with pytest.raises(ValueError, match=f"ISLConfig.{field}"):
+        ISLConfig(**kw)
+
+
+def test_trivial_config_detection():
+    assert FaultConfig().trivial
+    assert not FaultConfig(deorbit=((0, 1),)).trivial
+    assert not FaultConfig(rate_scale_min=0.5).trivial
+
+
+# ------------------------------------------------------------------- traces
+
+
+def test_trace_deorbit_launch_semantics():
+    cfg = FaultConfig(deorbit=((1, 4),), launch=((1, 8), (2, 3)))
+    tr = FT.fault_trace(cfg, 12, K=4)
+    # sat 1: deorbit first -> alive until 4, dead [4, 8), alive from 8
+    assert tr.alive[:4, 1].all() and not tr.alive[4:8, 1].any() \
+        and tr.alive[8:, 1].all()
+    # sat 2: first event is a launch -> starts the run dead
+    assert not tr.alive[:3, 2].any() and tr.alive[3:, 2].all()
+    # untouched satellites alive throughout
+    assert tr.alive[:, 0].all() and tr.alive[:, 3].all()
+    # revive marks exactly the dead->alive edges (row 0 never revives)
+    rv = tr.revive
+    assert not rv[0].any()
+    assert rv[8, 1] and rv[3, 2] and rv.sum() == 2
+
+
+def test_trace_station_outage_and_weather():
+    cfg = FaultConfig(outages=((1, 2, 5),), rate_scale_min=0.25,
+                      rate_scale_max=0.75, rate_block=4, seed=9)
+    tr = FT.fault_trace(cfg, 10, K=3, num_stations=2)
+    assert tr.station_up[:, 0].all()
+    assert tr.station_up[:2, 1].all() and not tr.station_up[2:5, 1].any() \
+        and tr.station_up[5:, 1].all()
+    # weather: blockwise-constant, within bounds, deterministic in seed
+    assert (tr.rate_scale >= 0.25).all() and (tr.rate_scale <= 0.75).all()
+    assert len(set(tr.rate_scale[:4])) == 1
+    tr2 = FT.fault_trace(cfg, 10, K=3, num_stations=2)
+    np.testing.assert_array_equal(tr.rate_scale, tr2.rate_scale)
+
+
+def test_trace_validation_errors():
+    with pytest.raises(ValueError, match="out of range"):
+        FT.fault_trace(FaultConfig(deorbit=((7, 1),)), 5, K=4)
+    with pytest.raises(ValueError, match="out of range"):
+        FT.fault_trace(FaultConfig(outages=((3, 0, 2),)), 5, K=4,
+                       num_stations=2)
+    with pytest.raises(ValueError, match="station information"):
+        FT.fault_trace(FaultConfig(outages=((0, 0, 2),)), 5, K=4)
+
+
+def test_trace_reach_from_counts():
+    # sat 0 only sees station 0, sat 1 only station 1; station 1 down
+    # throughout -> sat 1 unreachable, sat 0 untouched
+    counts = np.zeros((4, 2, 2), np.int32)
+    counts[:, 0, 0] = 3
+    counts[:, 1, 1] = 3
+    cfg = FaultConfig(outages=((1, 0, 4),))
+    tr = FT.fault_trace(cfg, 4, K=2, counts=counts)
+    assert tr.reach[:, 0].all() and not tr.reach[:, 1].any()
+    assert tr.mask[:, 0].all() and not tr.mask[:, 1].any()
+
+
+def test_trace_extended_persists_final_row():
+    cfg = FaultConfig(deorbit=((0, 2),), outages=((0, 1, 10),),
+                      rate_scale_min=0.5, rate_scale_max=0.5)
+    tr = FT.fault_trace(cfg, 4, K=2, num_stations=1).extended(9)
+    assert tr.num_windows == 9
+    assert not tr.alive[4:, 0].any()          # deorbited stays dead
+    assert not tr.station_up[4:, 0].any()     # tail outage stays dark
+    assert (tr.rate_scale[4:] == tr.rate_scale[3]).all()
+    assert tr.extended(5) is tr               # no-op when already covered
+
+
+# --------------------------------------------------------------- transforms
+
+
+def test_mask_connectivity_kills_dead_contacts():
+    C = np.ones((6, 3), bool)
+    tr = FT.fault_trace(FaultConfig(deorbit=((1, 2),)), 6, K=3)
+    M = FT.mask_connectivity(C, tr)
+    assert M[:2].all() and not M[2:, 1].any() and M[2:, [0, 2]].all()
+
+
+def test_mask_served_assigned_station_down_no_rebid():
+    # both satellites visible to the up station too, but satellite 1 is
+    # *assigned* to the down station -> its contact dies, no reassignment
+    served = np.ones((2, 2), bool)
+    grants = np.full((2, 2), 4, np.int32)
+    assign = np.array([[0, 1], [0, 1]], np.int32)
+    cfg = FaultConfig(outages=((1, 0, 2),), rate_scale_min=0.5,
+                      rate_scale_max=0.5)
+    tr = FT.fault_trace(cfg, 2, K=2, num_stations=2)
+    s2, g2 = FT.mask_served(served, grants, assign, tr)
+    assert s2[:, 0].all() and not s2[:, 1].any()
+    np.testing.assert_array_equal(g2[:, 0], [2, 2])   # floor(4 * 0.5)
+    np.testing.assert_array_equal(g2[:, 1], [0, 0])
+
+
+def test_mask_budget_clears_assign_and_masks_visible():
+    from repro.core.connectivity import LinkBudget
+    b = LinkBudget(visible=np.ones((3, 2), bool),
+                   served=np.ones((3, 2), bool),
+                   assign=np.zeros((3, 2), np.int32),
+                   grants=np.full((3, 2), 5, np.int32),
+                   need_up=2, need_dn=1)
+    tr = FT.fault_trace(FaultConfig(deorbit=((0, 1),)), 3, K=2,
+                        num_stations=1)
+    m = FT.mask_budget(b, tr)
+    assert not m.visible[1:, 0].any() and m.visible[:, 1].all()
+    assert not m.served[1:, 0].any()
+    assert (m.assign[1:, 0] == -1).all() and (m.assign[:, 1] == 0).all()
+    assert (m.grants[1:, 0] == 0).all()
+    assert m.need_up == 2 and m.need_dn == 1   # costs never rescale
+
+
+def test_fault_reset_semantics_and_idempotency():
+    state = SS.SatState(jnp.array([3, 4]), jnp.array([2, -1]),
+                        jnp.array([1, 0]), jnp.array([5, 6]),
+                        jnp.array([7, 8]))
+    revive = jnp.array([True, False])
+    out = FT.fault_reset(state, revive)
+    assert int(out.version[0]) == -1 and int(out.pending[0]) == -1
+    assert int(out.progress[0]) == 0 and int(out.relay[0]) == 0
+    # untouched columns / satellites
+    np.testing.assert_array_equal(np.asarray(out.buffered), [1, 0])
+    assert int(out.version[1]) == 4 and int(out.progress[1]) == 6
+    again = FT.fault_reset(out, revive)
+    for a, b in zip(out, again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scenario_helpers_deterministic():
+    churn = FT.random_churn(20, 50, 0.25, seed=4)
+    assert churn == FT.random_churn(20, 50, 0.25, seed=4)
+    assert len(churn) == 5
+    assert len({k for k, _ in churn}) == 5          # distinct satellites
+    assert all(1 <= w < 50 for _, w in churn)
+    assert FT.random_churn(20, 50, 0.0) == ()
+    bo = FT.station_blackout(3, 4, 9)
+    assert bo == ((0, 4, 9), (1, 4, 9), (2, 4, 9))
+
+
+# -------------------------------------------------- ISL fault interactions
+
+
+def test_gossip_step_ignores_dead_satellites():
+    K = 4
+    idx = jnp.arange(K, dtype=jnp.int32)
+    nxt = jnp.asarray((np.arange(K) + 1) % K, jnp.int32)
+    prv = jnp.asarray((np.arange(K) - 1) % K, jnp.int32)
+    state = SS.SatState(jnp.array([5, 0, 0, 0]), jnp.array([5, 0, 0, 0]),
+                        jnp.full(K, -1))
+    alive = jnp.array([False, True, True, True])
+    st2, adopted = ISL.gossip_step(state, nxt, prv, idx, idx,
+                                   jnp.bool_(True), alive=alive)
+    # the dead satellite's newer version must not propagate, and the dead
+    # satellite itself must not adopt
+    np.testing.assert_array_equal(np.asarray(st2.version), [5, 0, 0, 0])
+    assert not bool(adopted.any())
+    # without the mask it would propagate to both ring neighbours
+    st3, _ = ISL.gossip_step(state, nxt, prv, idx, idx, jnp.bool_(True))
+    assert int(np.asarray(st3.version)[1]) == 5
+
+
+def test_elect_sinks_skips_dead_candidates():
+    topo = ISL.ISLTopology(plane=np.zeros(3, np.int32),
+                           pos=np.arange(3, dtype=np.int32),
+                           nxt=np.array([1, 2, 0], np.int32),
+                           prv=np.array([2, 0, 1], np.int32),
+                           left=np.arange(3, dtype=np.int32),
+                           right=np.arange(3, dtype=np.int32))
+    C = np.zeros((4, 3), bool)
+    C[0, 0] = True       # satellite 0 has the earliest contact...
+    C[2, 1] = True
+    assert ISL.elect_sinks(C, topo)[0] == 0
+    # ...but dead candidates are skipped
+    sink = ISL.elect_sinks(C, topo, alive=np.array([False, True, True]))
+    assert (sink == 1).all()
+    # an all-dead plane falls back to the full membership
+    sink = ISL.elect_sinks(C, topo, alive=np.zeros(3, bool))
+    assert (sink == 0).all()
+
+
+# -------------------------------------------- engine: parity and lockstep
+
+
+def _all_alive_trace(I, K):
+    return FT.fault_trace(FaultConfig(deorbit=((0, I + 1),)), I, K=K)
+
+
+@st.composite
+def _fault_events(draw, K, I):
+    deorbit = draw(st.lists(
+        st.tuples(st.integers(0, K - 1), st.integers(0, I)), max_size=3))
+    launch = draw(st.lists(
+        st.tuples(st.integers(0, K - 1), st.integers(0, I)), max_size=3))
+    return FaultConfig(deorbit=tuple(deorbit), launch=tuple(launch))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_scenario())
+def test_all_alive_trace_is_bit_identical(scn):
+    """A trace injecting nothing live (a deorbit beyond the horizon) must
+    reproduce the faults=None trajectory bit-for-bit under both
+    strategies — the faults=None parity contract."""
+    C, a = scn
+    I, K = C.shape
+    ref = SimulationEngine(C, _StubAdapter(K), ScriptedScheduler(a),
+                           EngineConfig(eval_every=I + 1))
+    ref_res = ref.run()
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=I + 1,
+                                            fast_loop=fast),
+                               faults=_all_alive_trace(I, K))
+        res = eng.run()
+        np.testing.assert_array_equal(eng.version, ref.version)
+        np.testing.assert_array_equal(eng.pending, ref.pending)
+        np.testing.assert_array_equal(eng.buffered_base, ref.buffered_base)
+        assert eng.ig == ref.ig
+        assert res.summary() == ref_res.summary()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_faulted_engine_strategies_lockstep(data):
+    """Fast and host loops must stay bit-identical under arbitrary churn
+    (the fault analogue of the protocol lockstep property)."""
+    C, a = data.draw(_scenario())
+    I, K = C.shape
+    trace = FT.fault_trace(data.draw(_fault_events(K, I)), I, K=K)
+    runs = []
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=I + 1,
+                                            fast_loop=fast), faults=trace)
+        res = eng.run()
+        assert eng._fast_ok == fast
+        runs.append((eng, res))
+    (ef, rf), (eh, rh) = runs
+    np.testing.assert_array_equal(ef.version, eh.version)
+    np.testing.assert_array_equal(ef.pending, eh.pending)
+    np.testing.assert_array_equal(ef.buffered_base, eh.buffered_base)
+    assert ef.ig == eh.ig
+    assert rf.summary() == rh.summary()
+    assert rf.total_connections == rh.total_connections
+    assert rf.idle_connections == rh.idle_connections
+    # executed connections are the fault-masked ones
+    assert rf.total_connections == int((C & trace.mask).sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_faulted_linked_engine_strategies_lockstep(data):
+    """Same lockstep property with a finite link budget in the loop (the
+    masked-grants path)."""
+    C, a, grants, need_up, need_dn = data.draw(_linked_scenario())
+    I, K = C.shape
+    cfg = data.draw(_fault_events(K, I))
+    cfg = dataclasses.replace(cfg, rate_scale_min=0.5, rate_scale_max=1.0,
+                              rate_block=4)
+    trace = FT.fault_trace(cfg, I, K=K)
+    runs = []
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=I + 1,
+                                            fast_loop=fast),
+                               link_budget=_budget(C, grants, need_up,
+                                                   need_dn), faults=trace)
+        res = eng.run()
+        runs.append((eng, res))
+    (ef, rf), (eh, rh) = runs
+    np.testing.assert_array_equal(ef.version, eh.version)
+    np.testing.assert_array_equal(ef.pending, eh.pending)
+    np.testing.assert_array_equal(ef.buffered_base, eh.buffered_base)
+    np.testing.assert_array_equal(ef.transfer_progress,
+                                  eh.transfer_progress)
+    assert ef.ig == eh.ig
+    assert rf.summary() == rh.summary()
+
+
+def test_recovered_satellite_forced_redownload():
+    """A satellite that dies and revives comes back as "never received":
+    until its next (post-revival) contact it holds version/pending -1 and
+    cannot upload a pre-outage update."""
+    I, K = 8, 2
+    C = np.zeros((I, K), bool)
+    C[:, 0] = True           # satellite 0: control, always connected
+    C[0, 1] = True           # satellite 1 uploads at window 0...
+    a = np.zeros(I, np.int32)
+    a[1] = 1                 # ...aggregation at window 1
+    trace = FT.fault_trace(
+        FaultConfig(deorbit=((1, 2),), launch=((1, 5),)), I, K=K)
+    for fast in (True, False):
+        eng = SimulationEngine(C, _StubAdapter(K),
+                               ScriptedScheduler(a, device=fast),
+                               EngineConfig(eval_every=I + 1,
+                                            fast_loop=fast), faults=trace)
+        eng.run()
+        # revived at 5 with no further contact: state is the reset state,
+        # not the pre-outage (version 0 / fresh-round) state
+        assert eng.version[1] == -1 and eng.pending[1] == -1
+        assert eng.version[0] == eng.ig == 1
+
+
+class _ProbeScheduler(ScriptedScheduler):
+    """Records which connectivity object `device_plan` receives."""
+
+    def __init__(self, a):
+        super().__init__(a, device=True)
+        self.seen = []
+
+    def device_plan(self, i, *, connectivity, **kw):
+        self.seen.append((connectivity, kw.get("exec_connectivity")))
+        return super().device_plan(i)
+
+
+def test_blind_vs_oracle_plan_view():
+    I, K = 8, 3
+    C = np.ones((I, K), bool)
+    a = np.zeros(I, np.int32)
+    cfg = FaultConfig(deorbit=((0, 2),))
+    for oracle in (False, True):
+        trace = FT.fault_trace(dataclasses.replace(cfg, oracle=oracle),
+                               I, K=K)
+        sched = _ProbeScheduler(a)
+        eng = SimulationEngine(C, _StubAdapter(K), sched,
+                               EngineConfig(eval_every=I + 1), faults=trace)
+        eng.run()
+        plan_c, exec_c = sched.seen[0]
+        assert np.array_equal(exec_c, eng.C)
+        assert exec_c[3, 0] == False  # noqa: E712 — executed world faulted
+        if oracle:
+            assert np.array_equal(plan_c, eng.C)       # planner sees faults
+        else:
+            assert plan_c[3, 0] and plan_c.all()       # planner stays clean
+
+
+# --------------------------------------------------------- Federation wiring
+
+
+def _tiny_experiment(**kw):
+    return FLExperiment(
+        constellation=ConstellationConfig(num_satellites=8, days=0.5),
+        dataset=DatasetConfig(num_train=64, num_val=32),
+        scheduler=SchedulerConfig(kind="async"),
+        train=EngineConfig(local_steps=1, eval_every=16, max_windows=16),
+        **kw)
+
+
+def test_federation_trivial_faults_resolve_to_none():
+    fed = Federation.from_experiment(_tiny_experiment(faults=FaultConfig()))
+    assert fed.faults is None
+    assert fed.engine().faults is None
+
+
+def test_federation_resolves_and_shares_fault_trace():
+    cfg = FaultConfig(deorbit=((1, 3),), outages=((0, 0, 8),))
+    fed = Federation.from_experiment(_tiny_experiment(faults=cfg))
+    assert isinstance(fed.faults, FT.FaultTrace)
+    assert fed.faults.alive.shape == fed.C.shape
+    # geometry path + outages: the reach mask was resolved from counts
+    assert fed.faults.reach is not None
+    # with_scheduler clones share the identical resolved trace (one fault
+    # world across a scheduler comparison)
+    assert fed.with_scheduler("sync").faults is fed.faults
+    eng = fed.engine()
+    assert eng.faults is fed.faults
+    assert not eng.C[4:, 1].any()     # dead satellite lost its contacts
+
+
+def test_federation_linked_faults_mask_grants():
+    cfg = FaultConfig(deorbit=((0, 1),), rate_scale_min=0.5,
+                      rate_scale_max=0.5)
+    link = LinkConfig(uplink_mbps=10.0, downlink_mbps=10.0, model_mb=40.0,
+                      gs_capacity=1)
+    fed = Federation.from_experiment(
+        _tiny_experiment(faults=cfg, link=link))
+    eng = fed.engine()
+    eng.prepare()
+    assert not eng.C[1:, 0].any()                    # dead: no service
+    clean = eng._plan_grants
+    # surviving grants are the weather-scaled clean grants
+    served = eng.C
+    np.testing.assert_array_equal(
+        eng._grants[served], (clean[served] * 0.5).astype(np.int32))
+    # blind by default: schedulers plan on the clean artifacts
+    assert eng._plan_C is not eng.C
+    assert eng._plan_link.grant is clean

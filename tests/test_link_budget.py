@@ -283,7 +283,8 @@ def test_hotpaths_registers_all_sections_with_parity_gates():
     section nor any older parity gate can be dropped quietly."""
     hp = pytest.importorskip("benchmarks.hotpaths")
     expected = {"search_replan", "search_scaling", "aggregation_round",
-                "window_loop", "utility_sampler", "link_budget", "isl"}
+                "window_loop", "utility_sampler", "link_budget", "isl",
+                "faults"}
     assert expected <= set(hp.SECTIONS)
     for name in expected:
         fn, parity = hp.SECTIONS[name]
