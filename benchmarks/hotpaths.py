@@ -1036,6 +1036,171 @@ def bench_faults(smoke: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 9. sweep scaling: batched whole-experiment dispatch + the sharded-K gate
+
+
+_MESH_GATE_SCRIPT = r"""
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, {src!r})
+import numpy as np
+import jax.numpy as jnp
+from repro.core import mesh as MM
+from repro.core.scheduler import make_scheduler
+from repro.fl.engine import EngineConfig, SimulationEngine
+
+K, W, M = {K}, {W}, {M}
+
+class _NullAdapter:
+    def __init__(self, K): self.clients = list(range(K))
+    def init(self, key): return {{"w": jnp.zeros((2,))}}
+    def loss(self, params, batch):
+        return jnp.sum(params["w"]) * 0.0 + jnp.sum(batch) * 0.0
+    def client_batch(self, ci, round_rng, batch_size, num_batches):
+        return jnp.zeros((num_batches, 1))
+    def accuracy(self, params): return 0.0
+    def val_loss(self, params): return 0.0
+
+C = np.random.default_rng(0).random((W, K)) < 0.08
+
+def run(mesh):
+    eng = SimulationEngine(C, _NullAdapter(K),
+                           make_scheduler("fedbuff", M=M),
+                           EngineConfig(eval_every=W, max_windows=W),
+                           mesh=mesh)
+    t0 = time.perf_counter()
+    res = eng.run()
+    return eng, res, time.perf_counter() - t0
+
+mesh = MM.sim_mesh()
+e0, r0, _ = run(None)
+t_single = min(run(None)[2] for _ in range(2))
+e1, r1, _ = run(mesh)
+t_mesh = min(run(mesh)[2] for _ in range(2))
+identical = (np.array_equal(e0.version, e1.version)
+             and np.array_equal(e0.pending, e1.pending)
+             and np.array_equal(e0.buffered_base, e1.buffered_base)
+             and e0.ig == e1.ig
+             and r0.idle_connections == r1.idle_connections
+             and r0.staleness_hist.tolist() == r1.staleness_hist.tolist())
+print("MESH_GATE " + json.dumps({{
+    "K": K, "windows": W, "devices": MM.mesh_size(mesh),
+    "t_single_device_s": t_single, "t_mesh_s": t_mesh,
+    "trajectory_identical": bool(identical)}}))
+"""
+
+
+def _mesh_gate(*, K, W, M):
+    """Run the sharded-K parity gate on a forced 8-virtual-device CPU mesh
+    in a fresh subprocess (the device count locks at first jax init, so
+    the bench process itself cannot host it)."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    script = _MESH_GATE_SCRIPT.format(
+        src=os.path.join(_ROOT, "src"), K=K, W=W, M=M)
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=1200,
+                       cwd=_ROOT, env=env)
+    if r.returncode != 0:
+        raise SystemExit(f"mesh gate subprocess failed:\n{r.stderr[-2000:]}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("MESH_GATE ")][-1]
+    return json.loads(line[len("MESH_GATE "):])
+
+
+@section("sweep_scaling",
+         parity=lambda r: r["per_variant_identical"]
+         and r["mesh_gate"]["trajectory_identical"])
+def bench_sweep_scaling(smoke: bool) -> dict:
+    """(a) Batched dispatch: a fedbuff-M x churn-fraction x seed grid of
+    whole experiment variants over one world, run once as V sequential
+    engine runs and once as a single `jit(vmap)` sweep dispatch
+    (`repro.fl.sweep.sweep_engines`), parity-gated on every variant's
+    protocol counters and final state being bit-identical. (b) Sharded-K
+    gate: a fedbuff run at starlink1000 scale under `mesh=sim_mesh()` on
+    a forced 8-virtual-device CPU mesh must be trajectory-bit-identical
+    to the single-device run (subprocess, since the device count locks at
+    first jax init)."""
+    from repro.core.faults import FaultConfig, fault_trace, random_churn
+    from repro.fl import sweep as SW
+    if smoke:
+        K, W = 12, 48
+        Ms, fracs, seeds = (2, 4), (0.1, 0.2), (0, 1)        # V = 8
+    else:
+        K, W = 40, 192
+        Ms, fracs, seeds = (2, 3, 4, 6), (0.1, 0.2, 0.3, 0.4), (0, 1)
+    C = np.random.default_rng(0).random((W, K)) < 0.08
+    adapter = _NullAdapter(K)
+    grid = [(M, f, s) for M in Ms for f in fracs for s in seeds]
+    traces = {(f, s): fault_trace(
+        FaultConfig(deorbit=random_churn(K, W, f, seed=s)), W, K=K)
+        for _, f, s in grid}
+
+    def build():
+        return [SimulationEngine(
+            C, adapter, make_scheduler("fedbuff", M=M),
+            EngineConfig(eval_every=W, max_windows=W),
+            faults=traces[(f, s)]) for M, f, s in grid]
+
+    # every variant shares the fedbuff indicator and column layout, so the
+    # whole grid is ONE vmapped dispatch — count the groups to prove it
+    groups = {SW._variant_columns(e)[0] for e in build()}
+
+    def run_sequential():
+        t0 = time.perf_counter()
+        out = [(e, e.run()) for e in build()]
+        return time.perf_counter() - t0, out
+
+    def run_batched():
+        engines = build()
+        t0 = time.perf_counter()
+        outs = SW.sweep_engines(engines)
+        return time.perf_counter() - t0, outs
+
+    _, seq = run_sequential()               # cold: pays the jit compiles
+    t_seq = min(run_sequential()[0] for _ in range(2))
+    t_swp_cold, outs = run_batched()
+    t_swp = min(run_batched()[0] for _ in range(2))
+
+    identical = all(
+        np.array_equal(e.version, o.version)
+        and np.array_equal(e.pending, o.pending)
+        and np.array_equal(e.buffered_base, o.buffered)
+        and e.ig == o.ig
+        and r.staleness_hist.tolist() == o.result.staleness_hist.tolist()
+        and r.idle_connections == o.result.idle_connections
+        and r.total_connections == o.result.total_connections
+        and r.num_global_updates == o.result.num_global_updates
+        and r.num_aggregated_gradients
+        == o.result.num_aggregated_gradients
+        for (e, r), o in zip(seq, outs))
+
+    print(f"sweep_scaling: {len(grid)} variants sequential {t_seq:.3f}s, "
+          f"batched {t_swp:.3f}s ({t_seq / t_swp:.1f}x), "
+          f"dispatch_groups={len(groups)}, per_variant_identical="
+          f"{bool(identical)}", flush=True)
+
+    gate = _mesh_gate(K=100 if smoke else 1000, W=48 if smoke else 96,
+                      M=12)
+    print(f"sweep_scaling mesh gate: K={gate['K']} on {gate['devices']} "
+          f"devices, single {gate['t_single_device_s']:.3f}s, mesh "
+          f"{gate['t_mesh_s']:.3f}s, trajectory_identical="
+          f"{gate['trajectory_identical']}", flush=True)
+    return {
+        "num_variants": len(grid), "K": K, "windows": W,
+        "dispatch_groups": len(groups),
+        "t_sequential_s": t_seq,
+        "t_batched_s": t_swp,
+        "t_batched_cold_s": t_swp_cold,
+        "speedup": t_seq / t_swp,
+        "per_variant_identical": bool(identical),
+        "mesh_gate": gate,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:

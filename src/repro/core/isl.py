@@ -37,6 +37,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -297,18 +298,25 @@ def reset_relay(state: SS.SatState, downloads):
         relay=jnp.where(downloads, 0, state.relay))
 
 
-def sink_connectivity(conn, sink, arrived, pending):
+def sink_connectivity(conn, sink, arrived, pending, *, axis_name=None):
     """Effective connectivity under sink relaying: satellite k can reach
     the GS this window iff its plane's sink has a (served) contact AND
     k's update has arrived at the sink — or k has nothing in transit
     (idle / download-only contacts ride the sink's pass directly, the
     ring broadcast of the global model being pipelined within the
-    window)."""
+    window).
+
+    `sink` holds *global* satellite indices; when the satellite axis is
+    sharded (`axis_name`, see `repro.core.mesh`) the connectivity row is
+    `all_gather`ed — one (K,) bool row per window — so each shard can
+    look up its plane's sink wherever it lives."""
+    if axis_name is not None:
+        conn = jax.lax.all_gather(conn, axis_name, tiled=True)
     return conn[sink] & (arrived | (pending < 0))
 
 
 def gossip_step(state: SS.SatState, nxt, prv, left, right, do_hop,
-                alive=None):
+                alive=None, *, axis_name=None):
     """One asynchronous intra-ring gossip exchange (2206.00307): each
     satellite looks at its ring neighbours (and grid neighbours, which are
     self-loops unless cross-plane links are configured) and, when `do_hop`
@@ -325,9 +333,16 @@ def gossip_step(state: SS.SatState, nxt, prv, left, right, do_hop,
     version reads as -1, below any live version) and adopt nothing
     themselves. `alive=None` compiles the exact prior program.
 
+    The neighbour arrays hold *global* satellite indices; when the
+    satellite axis is sharded (`axis_name`) the masked version vector is
+    `all_gather`ed — one (K,) int row per hop — before the four gathers,
+    so ring/grid neighbours resolve across shard boundaries.
+
     Returns ``(state, adopted)`` with the adoption mask."""
     v = state.version
     vn = v if alive is None else jnp.where(alive, v, SS._m1(v))
+    if axis_name is not None:
+        vn = jax.lax.all_gather(vn, axis_name, tiled=True)
     nbv = jnp.maximum(jnp.maximum(vn[nxt], vn[prv]),
                       jnp.maximum(vn[left], vn[right]))
     adopted = do_hop & (nbv > v)

@@ -65,6 +65,10 @@ class Scheduler:
     name = "base"
     isl_mode = None      # "sink" | "gossip" | None (ground-only)
     isl = None           # resolved repro.core.isl.ISL, set by the engine
+    # the run's satellite-axis device mesh (repro.core.mesh), set by the
+    # engine before reset(); schedulers that run device-side simulation
+    # (fedspace's eq.-13 search) shard it over the same mesh as the run
+    mesh = None
 
     def reset(self):
         """Clear per-run state. The engine calls this once in `prepare()`;
@@ -289,7 +293,7 @@ class FedSpaceScheduler(Scheduler):
                                link=link),
             ig, self.regressor, status, n_min=n_min, n_max=n_max,
             num_candidates=self.num_candidates, s_max=self.s_max,
-            link=self._window_link(link, i))
+            link=self._window_link(link, i), mesh=self.mesh)
         self._window_start = i
 
     def decide(self, i, *, n_in_buffer, K, state, ig, connectivity, status,

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mesh as MM
 from repro.core import staleness as SS
 from repro.core.utility import featurize, featurize_jnp
 
@@ -51,16 +52,39 @@ def event_positions(candidates: np.ndarray):
     return idx.astype(np.int32), mask
 
 
-@functools.partial(jax.jit, static_argnames=("s_max",))
-def _simulate_marks(C_window, candidates, state, ig, link, *, s_max: int):
+@functools.partial(jax.jit, static_argnames=("s_max", "mesh"))
+def _simulate_marks(C_window, candidates, state, ig, link, *, s_max: int,
+                    mesh=None):
     """Jitted marks-collecting candidate simulation (the eager vmapped
     scan pays ~3x its own runtime in dispatch overhead at search shapes).
     `link` is an optional device `LinkGate` (grant (I0, K)) so candidates
-    are scored against transfer-gated effective connectivity."""
-    _, _, infos = SS.simulate_candidates(C_window, candidates, state, ig,
-                                         s_max=s_max, collect="marks",
-                                         link=link)
-    return infos["marks"]
+    are scored against transfer-gated effective connectivity.
+
+    `mesh` (static — meshes hash) shards the satellite axis of the
+    vmapped scan under `shard_map`: state columns and the K axes of the
+    connectivity/grant windows split across devices, candidates and
+    scalars replicate, and the only cross-shard traffic is the
+    empty-buffer psum inside `aggregate_step` (the marks themselves are
+    per-satellite). The caller pads K to a device-count multiple
+    (`score_candidates` does); `mesh=None` compiles the exact
+    single-device program."""
+    def run(Cw, cands, st, g, lk, axis=None):
+        _, _, infos = SS.simulate_candidates(Cw, cands, st, g,
+                                             s_max=s_max, collect="marks",
+                                             link=lk, axis_name=axis)
+        return infos["marks"]
+
+    if mesh is None:
+        return run(C_window, candidates, state, ig, link)
+    ax = mesh.axis_names[0]
+    P = jax.sharding.PartitionSpec
+    sat, rep, col = P(ax), P(), P(None, ax)
+    link_spec = rep if link is None else SS.LinkGate(col, rep, rep)
+    return MM.shard_map(
+        functools.partial(run, axis=ax), mesh,
+        in_specs=(col, rep, sat, rep, link_spec),
+        out_specs=P(None, None, ax))(C_window, candidates, state, ig,
+                                     link)
 
 
 @functools.partial(jax.jit, static_argnames=("s_max",))
@@ -95,7 +119,8 @@ def _narrow_state(state: SS.SatState, ig: int, horizon: int):
 def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
                      state: SS.SatState, ig: int, regressor, status: float,
                      *, s_max: int = 8, chunk_rows: Optional[int] = None,
-                     link: Optional[SS.LinkGate] = None) -> np.ndarray:
+                     link: Optional[SS.LinkGate] = None,
+                     mesh=None) -> np.ndarray:
     """Predicted summed utility per candidate (eq. 13).
 
     When the regressor exposes `predict_device` (both built-in regressors
@@ -122,6 +147,12 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
         simulated transfers, so candidates are scored against effective —
         capacity-constrained — connectivity rather than raw visibility;
         `state.progress` must be attached when given.
+      mesh: optional satellite-axis device mesh (`repro.core.mesh`): the
+        fast path pads K to a device-count multiple with never-connected
+        satellites (whose marks stay -1, invisible to the histograms) and
+        shards the vmapped scan via `shard_map` — scores are bit-identical
+        to `mesh=None`, which compiles the exact single-device program.
+        The legacy `.predict` fallback ignores it.
 
     Returns: (R,) float32 predicted utility sums.
     """
@@ -148,7 +179,15 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
     R, I0 = cands.shape
     K = C_window.shape[1]
     idx, mask = event_positions(cands)
-    Cw = jnp.asarray(np.asarray(C_window, bool))
+    C_window = np.asarray(C_window, bool)
+    if mesh is not None:
+        Kp = MM.padded_size(K, mesh)
+        C_window = MM.pad_axis(C_window, Kp)
+        state = MM.pad_state(state, Kp)
+        if link is not None:
+            link = link._replace(grant=jnp.asarray(
+                MM.pad_axis(np.asarray(link.grant), Kp)))
+    Cw = jnp.asarray(C_window)
     st, igd = _narrow_state(state, int(ig), I0)
     if chunk_rows is None:
         chunk_rows = max(256, (64 << 20) // max(I0 * K, 1))
@@ -156,7 +195,7 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
     for c0 in range(0, R, chunk_rows):
         rows = slice(c0, min(c0 + chunk_rows, R))
         marks = _simulate_marks(Cw, jnp.asarray(cands[rows]), st, igd,
-                                link, s_max=s_max)
+                                link, s_max=s_max, mesh=mesh)
         feats = _event_features(marks, jnp.asarray(idx[rows]),
                                 jnp.float32(status), s_max=s_max)
         util = predict_device(feats).reshape(-1, idx.shape[1])
@@ -196,11 +235,12 @@ def fedspace_search(rng: np.random.Generator, C_window: np.ndarray,
                     state: SS.SatState, ig: int, regressor, status: float,
                     *, n_min: int = 4, n_max: int = 8, num_candidates: int
                     = 5000, s_max: int = 8,
-                    link: Optional[SS.LinkGate] = None) -> np.ndarray:
+                    link: Optional[SS.LinkGate] = None,
+                    mesh=None) -> np.ndarray:
     I0 = C_window.shape[0]
     cands = random_candidates(rng, I0, n_min, n_max, num_candidates)
     scores = score_candidates(cands, C_window, state, ig, regressor, status,
-                              s_max=s_max, link=link)
+                              s_max=s_max, link=link, mesh=mesh)
     return cands[select_candidate(cands, scores)]
 
 

@@ -35,6 +35,15 @@ def staleness_compensation(s, alpha: float = 0.5):
         if hasattr(s, "astype") else (s + 1.0) ** (-alpha)
 
 
+def _psum(x, axis_name):
+    """Cross-device sum when the satellite axis is sharded (`axis_name`
+    names the mesh axis, see `repro.core.mesh`), identity otherwise. All
+    protocol reductions are integer, so the cross-shard reassociation is
+    exact — the `axis_name=None` path compiles literally the same program
+    as every previous release."""
+    return x if axis_name is None else jax.lax.psum(x, axis_name)
+
+
 class SatState(NamedTuple):
     """Per-satellite protocol state. Arrays of shape (..., K).
 
@@ -116,7 +125,7 @@ def bootstrap_state(K: int, *, progress: bool = False,
 
 
 def upload_step(state: SatState, ig, connected, link: Optional[LinkGate]
-                = None):
+                = None, *, axis_name: Optional[str] = None):
     """Phase 1 of a time index: connected satellites hand their pending
     update to the GS buffer; idle contacts (eq. 10) are counted.
 
@@ -133,6 +142,10 @@ def upload_step(state: SatState, ig, connected, link: Optional[LinkGate]
     bit-for-bit. `connected` is the *effective* (capacity-resolved)
     connectivity when link budgets are modeled, so the idle/connected
     counters then count served contacts.
+
+    `axis_name` marks the satellite axis as sharded across a device mesh:
+    the masks stay per-shard but the three counters become cross-device
+    `psum`s (exact — integer sums) so every shard sees the global values.
 
     Returns (new_state, info) with masks/counters on device:
       uploads (K,) bool, idle (K,) bool,
@@ -153,15 +166,18 @@ def upload_step(state: SatState, ig, connected, link: Optional[LinkGate]
     # idle: connected, nothing to send, nothing new to fetch (eq. 10)
     idle = connected & (~has_pending) & (state.version == ig)
     info = {"uploads": uploads, "idle": idle,
-            "n_connected": jnp.sum(connected.astype(jnp.int32)),
-            "n_idle": jnp.sum(idle.astype(jnp.int32)),
-            "n_buffered": jnp.sum((buffered >= 0).astype(jnp.int32))}
+            "n_connected": _psum(jnp.sum(connected.astype(jnp.int32)),
+                                 axis_name),
+            "n_idle": _psum(jnp.sum(idle.astype(jnp.int32)), axis_name),
+            "n_buffered": _psum(jnp.sum((buffered >= 0).astype(jnp.int32)),
+                                axis_name)}
     return SatState(state.version, pending, buffered, progress,
                     state.relay), info
 
 
 def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
-                   collect: str = "hist"):
+                   collect: str = "hist",
+                   axis_name: Optional[str] = None):
     """Phase 2: when a^i = 1 and the buffer is non-empty, consume the buffer
     and advance the global version (a no-op on an empty buffer — eq. 4 has
     nothing to sum; the global version must not advance spuriously).
@@ -182,11 +198,18 @@ def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
           R*(s_max+1) histogram broadcasts; see `hist_from_marks`).
         * ``"none"``: {} — state transition only (the per-step reductions
           disappear from the compiled program even without relying on DCE).
+      axis_name: satellite axis sharded across a device mesh — the
+        empty-buffer guard and the histogram/count diagnostics become
+        cross-device reductions (exact integer psums; max via pmax) so
+        every shard takes the same aggregate-or-not branch.
 
     Returns (new_state, new_ig, info).
     """
     in_buffer = state.buffered >= 0
-    aggregate = jnp.logical_and(aggregate, jnp.any(in_buffer))
+    any_buf = jnp.any(in_buffer)
+    if axis_name is not None:
+        any_buf = _psum(any_buf.astype(jnp.int32), axis_name) > 0
+    aggregate = jnp.logical_and(aggregate, any_buf)
     new_ig = ig + aggregate.astype(jnp.asarray(ig).dtype)
     buffered = jnp.where(aggregate, _m1(state.buffered), state.buffered)
     new_state = SatState(state.version, state.pending, buffered,
@@ -203,10 +226,13 @@ def aggregate_step(state: SatState, ig, aggregate, *, s_max: int,
     # histogram as compare+reduce rather than scatter-add: identical
     # integer counts, but ~4x faster on CPU inside the vmapped search scan
     # (XLA lowers the (R, K)->(R, s_max+1) scatter poorly there)
-    hist = jnp.sum((stale_c[..., None] == jnp.arange(s_max + 1))
-                   & counted[..., None], axis=-2, dtype=jnp.int32)
-    n_agg = jnp.sum(counted.astype(jnp.int32))
+    hist = _psum(jnp.sum((stale_c[..., None] == jnp.arange(s_max + 1))
+                         & counted[..., None], axis=-2, dtype=jnp.int32),
+                 axis_name)
+    n_agg = _psum(jnp.sum(counted.astype(jnp.int32)), axis_name)
     max_stale = jnp.max(jnp.where(counted, stale, 0))
+    if axis_name is not None:
+        max_stale = jax.lax.pmax(max_stale, axis_name)
     info = {"hist": hist, "n_aggregated": n_agg,
             "max_staleness": max_stale, "aggregated": counted}
     return new_state, new_ig, info
@@ -285,7 +311,8 @@ def download_step(state: SatState, ig, connected, link: Optional[LinkGate]
 
 
 def step(state: SatState, ig, connected, aggregate, *, s_max: int,
-         collect: str = "hist", link: Optional[LinkGate] = None):
+         collect: str = "hist", link: Optional[LinkGate] = None,
+         axis_name: Optional[str] = None):
     """One time index of the protocol: upload ∘ aggregate ∘ download.
 
     Args:
@@ -301,14 +328,19 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int,
       link: optional per-window `LinkGate` (grant (K,)) gating uploads and
         downloads on accumulated transfer progress; None = instantaneous
         transfers (bit-identical to every previous release).
+      axis_name: satellite axis sharded across a device mesh — threaded to
+        the sub-transitions so counters/histograms and the empty-buffer
+        guard reduce across shards (see `repro.core.mesh`).
 
     Returns: (new_state, new_ig, info) where info (collect="hist") has:
       hist: (s_max+1,) counts of aggregated gradients per clipped staleness
       n_aggregated, n_idle, max_staleness (only meaningful when aggregate)
     """
-    state, up = upload_step(state, ig, connected, link)
+    state, up = upload_step(state, ig, connected, link,
+                            axis_name=axis_name)
     state, new_ig, agg = aggregate_step(state, ig, aggregate, s_max=s_max,
-                                        collect=collect)
+                                        collect=collect,
+                                        axis_name=axis_name)
     state, _ = download_step(state, new_ig, connected, link)
     if collect != "hist":
         return state, new_ig, agg
@@ -319,7 +351,8 @@ def step(state: SatState, ig, connected, aggregate, *, s_max: int,
 
 def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
                     lite: bool = False, collect: Optional[str] = None,
-                    link: Optional[LinkGate] = None):
+                    link: Optional[LinkGate] = None,
+                    axis_name: Optional[str] = None):
     """Roll the protocol over a scheduling window.
 
     Args:
@@ -338,6 +371,9 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
         ``"none"`` (state/ig only, infos empty).
       link: optional `LinkGate` whose grant is (I0, K) — row i gates the
         transfers of window i; scanned alongside C_window.
+      axis_name: satellite axis sharded across a device mesh — threaded to
+        `step` so the scan runs embarrassingly parallel over K with only
+        the counter/histogram psums crossing shards.
 
     Returns (final_state, final_ig, infos) with infos stacked over I0:
       hist (I0, s_max+1) and, unless lite, n_aggregated (I0,), ... — or
@@ -358,7 +394,8 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
         gate = None if link is None \
             else LinkGate(inp[2], link.need_up, link.need_dn)
         st, g, info = step(st, g, c, ai.astype(bool), s_max=s_max,
-                           collect=collect, link=gate)
+                           collect=collect, link=gate,
+                           axis_name=axis_name)
         return (st, g), emit(info)
 
     (state, ig), infos = jax.lax.scan(
@@ -370,13 +407,15 @@ def simulate_window(C_window, a, state: SatState, ig, *, s_max: int = 8,
 def simulate_candidates(C_window, candidates, state: SatState, ig, *,
                         s_max: int = 8, lite: bool = False,
                         collect: Optional[str] = None,
-                        link: Optional[LinkGate] = None):
+                        link: Optional[LinkGate] = None,
+                        axis_name: Optional[str] = None):
     """`simulate_window` vmapped over candidate schedules (axis 0). The
     link gate (when given) is shared by every candidate — schedules differ
     in *when* they aggregate, not in the physics of the links."""
     return jax.vmap(lambda a: simulate_window(C_window, a, state, ig,
                                               s_max=s_max, lite=lite,
-                                              collect=collect, link=link)
+                                              collect=collect, link=link,
+                                              axis_name=axis_name)
                     )(candidates)
 
 

@@ -248,7 +248,8 @@ class Federation:
                  data, adapter, scheduler=None,
                  scheduler_diag: Optional[dict] = None,
                  link_budget=None, isl=None, faults=None,
-                 _regressor_cache: Optional[Dict] = None):
+                 _regressor_cache: Optional[Dict] = None,
+                 _counts_cache: Optional[Dict] = None):
         self.experiment = experiment
         self.spec = spec
         self.C = C
@@ -269,6 +270,12 @@ class Federation:
         # across with_scheduler clones of this world
         self._regressor_cache: Dict = ({} if _regressor_cache is None
                                        else _regressor_cache)
+        # per-station contact counts (CN.station_windows), resolved at
+        # most once per world and shared by with_faults clones — fault
+        # traces with station outages need them, and the propagation
+        # sweep behind them is the expensive part of a fault re-resolve
+        self._counts_cache: Dict = ({} if _counts_cache is None
+                                    else _counts_cache)
 
     # -- construction -------------------------------------------------------
 
@@ -324,6 +331,8 @@ class Federation:
         fed = cls(experiment=exp, spec=spec, C=C, data=data,
                   adapter=adapter, link_budget=budget, isl=isl,
                   faults=faults)
+        if counts is not None:
+            fed._counts_cache["station_windows"] = counts
         fed.scheduler, diag = fed._build_scheduler(exp)
         fed.scheduler_diag = diag
         return fed
@@ -371,16 +380,53 @@ class Federation:
                          data=self.data, adapter=self.adapter,
                          link_budget=self.link_budget, isl=self.isl,
                          faults=self.faults,
-                         _regressor_cache=self._regressor_cache)
+                         _regressor_cache=self._regressor_cache,
+                         _counts_cache=self._counts_cache)
+        fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
+        return fed
+
+    def with_faults(self, faults: Optional[FaultConfig]) -> "Federation":
+        """Same world — constellation, links, data, adapter, scheduler
+        config — under a different fault scenario: only the deterministic
+        per-window `FaultTrace` is re-resolved (None or a trivial config
+        clears faults). `from_experiment` with a changed `faults` field
+        would rebuild — and re-propagate — everything; this reuses the
+        orbital sweep, the dataset, and the scheduler setup (including a
+        FedSpace regressor), which is what makes fault-grid sweeps
+        (`repro.fl.sweep.run_sweep`) cheap to assemble."""
+        fcfg = faults
+        if fcfg is not None and fcfg.trivial:
+            fcfg = None
+        exp = dataclasses.replace(self.experiment, faults=faults)
+        counts = None
+        if fcfg is not None and (self.link_budget is not None
+                                 or fcfg.outages):
+            counts = self._counts_cache.get("station_windows")
+            if counts is None:
+                counts = CN.station_windows(
+                    self.spec, days=exp.constellation.days)
+                self._counts_cache["station_windows"] = counts
+        trace = None if fcfg is None else fault_trace(
+            fcfg, self.C.shape[0], K=self.spec.num_satellites,
+            num_stations=len(self.spec.ground_stations), counts=counts)
+        fed = Federation(experiment=exp, spec=self.spec, C=self.C,
+                         data=self.data, adapter=self.adapter,
+                         link_budget=self.link_budget, isl=self.isl,
+                         faults=trace,
+                         _regressor_cache=self._regressor_cache,
+                         _counts_cache=self._counts_cache)
         fed.scheduler, fed.scheduler_diag = fed._build_scheduler(exp)
         return fed
 
     # -- running ------------------------------------------------------------
 
-    def engine(self, *, callbacks: Sequence = (),
-               init_params=None) -> SimulationEngine:
+    def engine(self, *, callbacks: Sequence = (), init_params=None,
+               mesh=None) -> SimulationEngine:
         """Build a ready-to-run `SimulationEngine` for this world
-        (optionally with callbacks / a custom initial model)."""
+        (optionally with callbacks / a custom initial model). `mesh`
+        shards the satellite axis of the run across a device mesh
+        (`repro.core.mesh.sim_mesh()`) — trajectory-bit-identical to the
+        default single-device run."""
         # explicitly-set train fields win; unset (None) ones fall back to
         # the experiment-wide seed / LinkConfig compression settings
         exp = self.experiment
@@ -393,7 +439,8 @@ class Federation:
                                 callbacks=callbacks,
                                 init_params=init_params,
                                 link_budget=self.link_budget,
-                                isl=self.isl, faults=self.faults)
+                                isl=self.isl, faults=self.faults,
+                                mesh=mesh)
 
     def run(self, *, callbacks: Sequence = (),
             init_params=None) -> SimResult:

@@ -40,7 +40,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,7 @@ import numpy as np
 from repro.ckpt.checkpoint import DeviceCheckpointStore
 from repro.core import faults as FT
 from repro.core import isl as ISL
+from repro.core import mesh as MM
 from repro.core import staleness as SS
 from repro.core.aggregation import aggregation_weights
 from repro.core.scheduler import Scheduler
@@ -89,11 +90,17 @@ def _download(state, ig, conn, gate):
     return state
 
 
-def _sink_gate(gate, sink):
+def _sink_gate(gate, sink, axis_name=None):
     """Gather the link gate at each satellite's sink: the plane's shared
-    transfer rides the sink's contact units (None passes through)."""
-    return None if gate is None \
-        else gate._replace(grant=gate.grant[..., sink])
+    transfer rides the sink's contact units (None passes through). `sink`
+    holds global indices, so a sharded satellite axis (`axis_name`)
+    gathers the full grant row first."""
+    if gate is None:
+        return None
+    grant = gate.grant
+    if axis_name is not None:
+        grant = jax.lax.all_gather(grant, axis_name, tiled=True)
+    return gate._replace(grant=grant[..., sink])
 
 
 @jax.jit
@@ -141,11 +148,9 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("indicator", "horizon",
-                                             "isl_mode"))
-def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
-                  isl_dev=None, faults_dev=None, *, indicator, horizon,
-                  isl_mode=None):
+def _scan_impl(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
+               isl_dev=None, faults_dev=None, *, indicator, horizon,
+               isl_mode=None, axis=None):
     """Advance the protocol over up to `horizon` windows starting at
     absolute window i0, freezing at the first window whose aggregation
     indicator fires (post-upload, pre-aggregation — the engine trains and
@@ -174,6 +179,12 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
     ISL paths (dead satellites neither gossip nor ride their sink's
     contact — plain connectivity is already masked in `C_dev` by the
     engine).
+
+    `axis` names the mesh axis when the satellite dimension of every
+    array here is a shard (`_scan_windows` wraps this body in
+    `shard_map`): the transition counters become exact integer psums and
+    the ISL sink/neighbour lookups gather the one (K,) row they index —
+    everything else runs embarrassingly parallel over the shard.
 
     Returns (state, counters (horizon, 4) int32) with per-window
     [n_connected, n_idle, n_buffered, a]; counter rows after the event row
@@ -205,24 +216,27 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
             sink, need = isl_dev
             st2, arrived = ISL.relay_step(stf, need)
             up_conn = ISL.sink_connectivity(conn, sink, arrived,
-                                            st2.pending)
+                                            st2.pending, axis_name=axis)
             if alive is not None:
                 up_conn = up_conn & alive
-            gate = _sink_gate(gate, sink)
-            up_st, info = SS.upload_step(st2, ig, up_conn, gate)
+            gate = _sink_gate(gate, sink, axis)
+            up_st, info = SS.upload_step(st2, ig, up_conn, gate,
+                                         axis_name=axis)
             dn_conn = ISL.sink_connectivity(conn, sink, arrived,
-                                            up_st.pending)
+                                            up_st.pending, axis_name=axis)
             if alive is not None:
                 dn_conn = dn_conn & alive
         elif isl_mode == "gossip":
             g_nxt, g_prv, g_left, g_right, period = isl_dev
             do_hop = (period <= 1) | (t % period == 0)
             st2, _ = ISL.gossip_step(stf, g_nxt, g_prv, g_left, g_right,
-                                     do_hop, alive=alive)
-            up_st, info = SS.upload_step(st2, ig, conn, gate)
+                                     do_hop, alive=alive, axis_name=axis)
+            up_st, info = SS.upload_step(st2, ig, conn, gate,
+                                         axis_name=axis)
             dn_conn = conn
         else:
-            up_st, info = SS.upload_step(stf, ig, conn, gate)
+            up_st, info = SS.upload_step(stf, ig, conn, gate,
+                                         axis_name=axis)
             dn_conn = conn
         n_buf = info["n_buffered"]
         a = live & indicator(t, n_buf, ind_args) & (n_buf > 0)
@@ -236,6 +250,45 @@ def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
 
     (state, _), counters = jax.lax.scan(body, (state, jnp.bool_(False)), xs)
     return state, counters
+
+
+@functools.partial(jax.jit, static_argnames=("indicator", "horizon",
+                                             "isl_mode", "mesh"))
+def _scan_windows(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
+                  isl_dev=None, faults_dev=None, *, indicator, horizon,
+                  isl_mode=None, mesh=None):
+    """`_scan_impl`, jitted — and, when `mesh` is given (a
+    `jax.sharding.Mesh`, static: meshes hash), wrapped in `shard_map`
+    along the satellite axis. Satellite-sized inputs (state columns, the
+    connectivity/grant/fault matrices, ISL index arrays) shard; window
+    indices, `ig`, the indicator args, and the link needs replicate; the
+    counters come back replicated because every cross-shard quantity
+    inside is an exact integer psum — so the host-side event loop reads
+    identical values from any shard and `mesh=None` compiles the exact
+    single-device program of previous releases."""
+    impl = functools.partial(_scan_impl, indicator=indicator,
+                             horizon=horizon, isl_mode=isl_mode)
+    if mesh is None:
+        return impl(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
+                    isl_dev, faults_dev)
+    ax = mesh.axis_names[0]
+    P = jax.sharding.PartitionSpec
+    sat, rep, col = P(ax), P(), P(None, ax)
+    link_spec = rep if link_dev is None else (col, rep, rep)
+    if isl_mode == "sink":
+        isl_spec = (sat, sat)
+    elif isl_mode == "gossip":
+        isl_spec = (sat, sat, sat, sat, rep)
+    else:
+        isl_spec = rep
+    faults_spec = rep if faults_dev is None else (col, col)
+    sharded = MM.shard_map(
+        functools.partial(impl, axis=ax), mesh,
+        in_specs=(sat, rep, col, rep, rep, rep, link_spec, isl_spec,
+                  faults_spec),
+        out_specs=(sat, rep))
+    return sharded(state, ig, C_dev, i0, n_valid, ind_args, link_dev,
+                   isl_dev, faults_dev)
 
 
 @dataclass
@@ -308,6 +361,59 @@ class EngineConfig:
     fast_loop: bool = True
 
 
+class RunArtifacts(NamedTuple):
+    """The resolved world arrays one run executes on: the effective
+    connectivity/grants (`C`/`grants`), the scheduler-facing planning view
+    (`plan_C`/`plan_grants` — the same objects unless a blind fault trace
+    splits them), and the horizon-extended `FaultTrace`."""
+    C: np.ndarray
+    grants: Optional[np.ndarray]
+    plan_C: np.ndarray
+    plan_grants: Optional[np.ndarray]
+    trace: Optional[FT.FaultTrace]
+
+
+def resolve_run_artifacts(C, cfg: EngineConfig, *, link_budget=None,
+                          faults=None) -> RunArtifacts:
+    """Resolve raw world inputs into `RunArtifacts`: substitute the link
+    budget's capacity-resolved `served` matrix, tile the connectivity (and
+    grants) to the requested horizon per `cfg.repeat_connectivity`, extend
+    the fault trace over the tiled length, and split the plan view from
+    the executed view (clean-vs-masked under a blind trace, identical
+    under none/oracle). One resolution semantics shared by the engine and
+    the batched sweep (`repro.fl.sweep`)."""
+    grants = assign = None
+    if link_budget is not None:
+        C = link_budget.served
+        grants = np.asarray(link_budget.grants, np.int32)
+        assign = np.asarray(link_budget.assign, np.int32)
+    repeat = cfg.repeat_connectivity
+    if repeat == 0:    # auto: tile C up to the requested horizon
+        need = cfg.max_windows or C.shape[0]
+        repeat = max(1, -(-int(need) // C.shape[0]))
+    if repeat > 1:
+        C = np.concatenate([C] * repeat, axis=0)
+        if grants is not None:
+            grants = np.concatenate([grants] * repeat, axis=0)
+            assign = np.concatenate([assign] * repeat, axis=0)
+    C = np.asarray(C, bool)
+    # plan view (what schedulers see) vs executed view (what the run
+    # applies): the same objects without faults or under an oracle
+    # trace, clean-vs-masked under a blind one
+    plan_C, plan_grants = C, grants
+    trace = None if faults is None else faults.extended(C.shape[0])
+    if trace is None:
+        exec_C, exec_grants = C, grants
+    elif link_budget is not None:
+        exec_C, exec_grants = FT.mask_served(C, grants, assign, trace)
+    else:
+        exec_C = C & trace.mask[:C.shape[0]]
+        exec_grants = None
+    if trace is not None and trace.oracle:
+        plan_C, plan_grants = exec_C, exec_grants
+    return RunArtifacts(exec_C, exec_grants, plan_C, plan_grants, trace)
+
+
 class SimulationEngine:
     """One federated run: connectivity x adapter x scheduler -> SimResult.
 
@@ -364,12 +470,23 @@ class SimulationEngine:
         when its plan is wrong). `faults=None` (default) keeps every
         compiled program and trajectory bit-identical to previous
         releases.
+      mesh: optional `jax.sharding.Mesh` (see `repro.core.mesh.sim_mesh`)
+        sharding the satellite axis of the protocol state and every
+        satellite-sized artifact across devices. K is padded up to a
+        multiple of the device count with trajectory-inert
+        never-connected satellites (`repro.core.mesh.pad_state`), the
+        fast loop's window scans run under `shard_map` with exact
+        integer psums as the only cross-shard traffic, and the host-side
+        mirrors/event path strip the padding — so any mesh run is
+        trajectory-bit-identical to `mesh=None` (the default, which
+        compiles the exact single-device program of previous releases).
     """
 
     def __init__(self, C: np.ndarray, adapter, scheduler: Scheduler,
                  config: Optional[EngineConfig] = None, *,
                  callbacks: Sequence = (), init_params=None,
-                 link_budget=None, isl=None, faults=None, **overrides):
+                 link_budget=None, isl=None, faults=None, mesh=None,
+                 **overrides):
         cfg = config if config is not None else EngineConfig()
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
@@ -381,37 +498,12 @@ class SimulationEngine:
         self.link_budget = link_budget
         self.isl = isl
         self.faults = faults
-        grants = assign = None
-        if link_budget is not None:
-            C = link_budget.served
-            grants = np.asarray(link_budget.grants, np.int32)
-            assign = np.asarray(link_budget.assign, np.int32)
-        repeat = cfg.repeat_connectivity
-        if repeat == 0:    # auto: tile C up to the requested horizon
-            need = cfg.max_windows or C.shape[0]
-            repeat = max(1, -(-int(need) // C.shape[0]))
-        if repeat > 1:
-            C = np.concatenate([C] * repeat, axis=0)
-            if grants is not None:
-                grants = np.concatenate([grants] * repeat, axis=0)
-                assign = np.concatenate([assign] * repeat, axis=0)
-        C = np.asarray(C, bool)
-        # plan view (what schedulers see) vs executed view (what the run
-        # applies): the same objects without faults or under an oracle
-        # trace, clean-vs-masked under a blind one
-        self._plan_C, self._plan_grants = C, grants
-        self._trace = None if faults is None \
-            else faults.extended(C.shape[0])
-        if self._trace is None:
-            self.C, self._grants = C, grants
-        elif link_budget is not None:
-            self.C, self._grants = FT.mask_served(C, grants, assign,
-                                                  self._trace)
-        else:
-            self.C = C & self._trace.mask[:C.shape[0]]
-            self._grants = None
-        if self._trace is not None and self._trace.oracle:
-            self._plan_C, self._plan_grants = self.C, self._grants
+        self.mesh = mesh
+        art = resolve_run_artifacts(C, cfg, link_budget=link_budget,
+                                    faults=faults)
+        self.C, self._grants = art.C, art.grants
+        self._plan_C, self._plan_grants = art.plan_C, art.plan_grants
+        self._trace = art.trace
         self.adapter = adapter
         self.scheduler = scheduler
         self.callbacks = list(callbacks)
@@ -433,32 +525,33 @@ class SimulationEngine:
     @property
     def version(self) -> np.ndarray:
         """Host mirror of the last global version each satellite received.
-        Read-only diagnostic — the authoritative state is `self.state`."""
-        return np.asarray(self.state.version)
+        Read-only diagnostic — the authoritative state is `self.state`
+        (mesh padding, when any, is stripped from every mirror)."""
+        return np.asarray(self.state.version)[:self.K]
 
     @property
     def pending(self) -> np.ndarray:
         """Host mirror of each satellite's pending-update base version."""
-        return np.asarray(self.state.pending)
+        return np.asarray(self.state.pending)[:self.K]
 
     @property
     def buffered_base(self) -> np.ndarray:
         """Host mirror of the GS buffer's per-satellite base versions."""
-        return np.asarray(self.state.buffered)
+        return np.asarray(self.state.buffered)[:self.K]
 
     @property
     def transfer_progress(self):
         """Host mirror of per-satellite in-progress transfer units (None
         unless the run models a link budget)."""
         return None if self.state.progress is None \
-            else np.asarray(self.state.progress)
+            else np.asarray(self.state.progress)[:self.K]
 
     @property
     def relay_units(self):
         """Host mirror of per-satellite accumulated ISL hop units (None
         unless the run relays through sink satellites)."""
         return None if self.state.relay is None \
-            else np.asarray(self.state.relay)
+            else np.asarray(self.state.relay)[:self.K]
 
     def prepare(self) -> None:
         """Initialize run state (model, client-update programs, checkpoint
@@ -473,8 +566,16 @@ class SimulationEngine:
                                  and mode is not None) else None
         self._isl_mode = mode if self._isl is not None else None
         self.scheduler.isl = self._isl
+        # schedulers that run device-side simulation (fedspace's eq.-13
+        # search) shard it over the same mesh as the run
+        self.scheduler.mesh = self.mesh
         self.scheduler.reset()
         self._stop_requested = False
+        # mesh runs pad K up to a device-count multiple with
+        # trajectory-inert never-connected satellites; _Kp is the padded
+        # satellite count every device-side artifact uses
+        self._Kp = self.K if self.mesh is None \
+            else MM.padded_size(self.K, self.mesh)
 
         key = jax.random.PRNGKey(cfg.seed)
         self.params = (self.adapter.init(key) if self._init_params is None
@@ -497,6 +598,10 @@ class SimulationEngine:
         linked = self.link_budget is not None
         self.state = SS.bootstrap_state(self.K, progress=linked,
                                         relay=self._isl_mode == "sink")
+        if self.mesh is not None:
+            self.state = jax.device_put(
+                MM.pad_state(self.state, self._Kp),
+                MM.sat_sharding(self.mesh))
         if linked:
             b = self.link_budget
             self._need_up = jnp.int32(b.need_up)
@@ -518,16 +623,16 @@ class SimulationEngine:
                       "on_downloads"))
         # device copy of the run's connectivity (and grants), padded with
         # _MAX_CHUNK all-false/zero rows so a bucketed scan slice never
-        # clamps
+        # clamps (columns padded to _Kp under a mesh)
         self._C_dev = jnp.asarray(np.concatenate(
-            [self.C[:self.num_windows],
-             np.zeros((_MAX_CHUNK, self.K), bool)])) \
+            [MM.pad_axis(self.C[:self.num_windows], self._Kp),
+             np.zeros((_MAX_CHUNK, self._Kp), bool)])) \
             if self._fast_ok else None
         self._link_dev = None
         if self._fast_ok and linked:
             G_dev = jnp.asarray(np.concatenate(
-                [self._grants[:self.num_windows],
-                 np.zeros((_MAX_CHUNK, self.K), np.int32)]))
+                [MM.pad_axis(self._grants[:self.num_windows], self._Kp),
+                 np.zeros((_MAX_CHUNK, self._Kp), np.int32)]))
             self._link_dev = (G_dev, self._need_up, self._need_dn)
         # fault masks: host rows feed the per-window host loop, padded
         # device copies feed the scans (None everywhere without a trace)
@@ -540,22 +645,30 @@ class SimulationEngine:
             self._revive = np.asarray(
                 self._trace.revive[:self.num_windows], bool)
             if self._fast_ok:
-                pad = np.zeros((_MAX_CHUNK, self.K), bool)
+                pad = np.zeros((_MAX_CHUNK, self._Kp), bool)
                 self._faults_dev = (
-                    jnp.asarray(np.concatenate([self._revive, pad])),
-                    jnp.asarray(np.concatenate([self._alive, pad])))
+                    jnp.asarray(np.concatenate(
+                        [MM.pad_axis(self._revive, self._Kp), pad])),
+                    jnp.asarray(np.concatenate(
+                        [MM.pad_axis(self._alive, self._Kp), pad])))
         # ISL device state: sink elections are cached per epoch (sink
-        # mode); the gossip neighbour arrays are run constants
+        # mode); the gossip neighbour arrays are run constants — padded
+        # satellites are their own (inert) neighbours/sinks
         self._sink_cache = {}
         self._gossip_dev = None
         if self._isl_mode == "gossip":
             topo = self._isl.topology
-            idx = np.arange(self.K, dtype=np.int32)
+            idx = np.arange(self._Kp, dtype=np.int32)
             cross = self._isl.cross_plane
+
+            def nbr(a):
+                return jnp.asarray(np.concatenate(
+                    [np.asarray(a, np.int32), idx[self.K:]]))
+
             self._gossip_dev = (
-                jnp.asarray(topo.nxt), jnp.asarray(topo.prv),
-                jnp.asarray(topo.left if cross else idx),
-                jnp.asarray(topo.right if cross else idx),
+                nbr(topo.nxt), nbr(topo.prv),
+                nbr(topo.left) if cross else jnp.asarray(idx),
+                nbr(topo.right) if cross else jnp.asarray(idx),
                 jnp.int32(max(self._isl.relay_windows, 1)))
 
         self.result = SimResult(scheme=self.scheduler.name,
@@ -606,16 +719,31 @@ class SimulationEngine:
 
     # --------------------------------------------------- chunked fast loop
 
+    def _pad_row(self, row, fill=0):
+        """Pad a host (K,) row to the mesh-padded satellite count (no-op
+        without a mesh)."""
+        return MM.pad_axis(row, self._Kp, fill=fill)
+
+    def _plan_state(self):
+        """The scheduler-facing (K,) view of the protocol state — mesh
+        padding stripped so `device_plan`/`decide` see the world at its
+        declared satellite count."""
+        if self._Kp == self.K:
+            return self.state
+        return jax.tree.map(lambda x: x[..., :self.K], self.state)
+
     def _gate(self, i: int):
         """Device `LinkGate` for window i (None when no link budget)."""
         if self._link is None:
             return None
-        return SS.LinkGate(jnp.asarray(self._grants[i]), self._need_up,
-                           self._need_dn)
+        return SS.LinkGate(jnp.asarray(self._pad_row(self._grants[i])),
+                           self._need_up, self._need_dn)
 
     def _sink_plan(self, i: int):
         """Device (sink, need_hops) arrays for window i's election epoch,
-        elected once per epoch from the run's effective connectivity."""
+        elected once per epoch from the run's effective connectivity.
+        Mesh-padded satellites are their own zero-distance sinks — their
+        connectivity is all-False, so they stay inert."""
         ep = self._isl.epoch
         e = i // ep
         if e not in self._sink_cache:
@@ -623,6 +751,11 @@ class SimulationEngine:
                 self._alive[e * ep:(e + 1) * ep].any(axis=0)
             sink, need = self._isl.sink_plan(self.C[e * ep:(e + 1) * ep],
                                              alive=alive_e)
+            if self._Kp != self.K:
+                sink = np.concatenate(
+                    [np.asarray(sink, np.int32),
+                     np.arange(self.K, self._Kp, dtype=np.int32)])
+                need = self._pad_row(np.asarray(need, np.int32))
             self._sink_cache[e] = (jnp.asarray(sink), jnp.asarray(need))
         return self._sink_cache[e]
 
@@ -633,12 +766,12 @@ class SimulationEngine:
         if self._trace is not None:
             # reviving satellites re-enter before planning (idempotent —
             # the scan re-applies the same reset at this window)
-            self.state = _fault_reset(self.state,
-                                      jnp.asarray(self._revive[i]))
+            self.state = _fault_reset(
+                self.state, jnp.asarray(self._pad_row(self._revive[i])))
         extra = {} if self._trace is None else {
             "exec_connectivity": self.C, "exec_link": self._link}
         plan = self.scheduler.device_plan(
-            i, K=self.K, state=self.state, ig=self.ig,
+            i, K=self.K, state=self._plan_state(), ig=self.ig,
             connectivity=self._plan_C, status=self.status,
             link=self._plan_link, **extra)
         if plan is None:
@@ -675,7 +808,7 @@ class SimulationEngine:
                 self.state, jnp.int32(self.ig), self._C_dev, jnp.int32(w),
                 jnp.int32(H), args, self._link_dev, isl_dev,
                 self._faults_dev, indicator=fn, horizon=bucket,
-                isl_mode=self._isl_mode)
+                isl_mode=self._isl_mode, mesh=self.mesh)
             counters = np.asarray(counters)
             advanced = H
             for j in range(H):
@@ -703,7 +836,7 @@ class SimulationEngine:
                             jnp.int32(w), jnp.int32(j + 1), args,
                             self._link_dev, isl_dev, self._faults_dev,
                             indicator=fn, horizon=bucket,
-                            isl_mode=self._isl_mode)
+                            isl_mode=self._isl_mode, mesh=self.mesh)
                     return w + j + 1, True
                 if a:        # scan froze at the event; rescan from w+j+1
                     advanced = j + 1
@@ -720,12 +853,12 @@ class SimulationEngine:
         identically to the fast loop's scan body). Returns the buffer
         occupancy."""
         res = self.result
-        conn_dev = jnp.asarray(np.asarray(conn, bool))
+        conn_dev = jnp.asarray(self._pad_row(np.asarray(conn, bool)))
         alive = None
         if self._trace is not None:
-            self.state = _fault_reset(self.state,
-                                      jnp.asarray(self._revive[i]))
-            alive = jnp.asarray(self._alive[i])
+            self.state = _fault_reset(
+                self.state, jnp.asarray(self._pad_row(self._revive[i])))
+            alive = jnp.asarray(self._pad_row(self._alive[i]))
         if self._isl_mode == "sink":
             sink, need = self._sink_plan(i)
             self.state, counters = _isl_upload(
@@ -749,8 +882,8 @@ class SimulationEngine:
         device-resident SatState is handed over as-is — no per-window
         host-array rebuild."""
         return self.scheduler.decide(
-            i, n_in_buffer=n_buf, K=self.K, state=self.state, ig=self.ig,
-            connectivity=self._plan_C, status=self.status,
+            i, n_in_buffer=n_buf, K=self.K, state=self._plan_state(),
+            ig=self.ig, connectivity=self._plan_C, status=self.status,
             link=self._plan_link)
 
     def on_aggregate(self, i: int) -> None:
@@ -868,11 +1001,11 @@ class SimulationEngine:
         modeled. Under sink relaying the plane downloads through its
         sink's contact and fresh rounds reset the relay counter (the fast
         loop's scan body does the same at non-event windows)."""
-        conn_dev = jnp.asarray(np.asarray(conn, bool))
+        conn_dev = jnp.asarray(self._pad_row(np.asarray(conn, bool)))
         if self._isl_mode == "sink":
             sink, need = self._sink_plan(i)
             alive = None if self._trace is None \
-                else jnp.asarray(self._alive[i])
+                else jnp.asarray(self._pad_row(self._alive[i]))
             self.state = _isl_download(self.state, jnp.int32(self.ig),
                                        conn_dev, self._gate(i), sink, need,
                                        alive)

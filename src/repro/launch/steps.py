@@ -217,10 +217,8 @@ def make_agg_step_opt(cfg: ModelConfig, mesh: Mesh, *, alpha: float = 0.5,
     combines — halving the collective bytes of the GSPMD baseline, which
     all-reduces the f32 delta. The final add to params stays f32."""
     from repro.core.staleness import staleness_compensation
-    try:
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+
+    from repro.core.mesh import shard_map
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
     def agg_step(params, update_stack, staleness):
@@ -243,9 +241,9 @@ def make_agg_step_opt(cfg: ModelConfig, mesh: Mesh, *, alpha: float = 0.5,
                         + delta.astype(jnp.float32)).astype(pl.dtype)
 
             return shard_map(
-                body, mesh=mesh,
+                body, mesh,
                 in_specs=(ps, uspec, P(dp)),
-                out_specs=ps, check_vma=False)(p, u, w)
+                out_specs=ps)(p, u, w)
 
         return jax.tree.map(one, params, update_stack, pspecs,
                             is_leaf=lambda x: hasattr(x, "shape"))

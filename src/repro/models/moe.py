@@ -203,11 +203,8 @@ def moe_apply_ep(params, x, cfg: ModelConfig, mesh, *,
     to the grouped path). Under eq.-4-style normalized gates the psum is
     the exact combine."""
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map as _shard_map
-        shard_map = _shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+
+    from repro.core.mesh import shard_map
 
     B, S, D = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
@@ -267,10 +264,9 @@ def moe_apply_ep(params, x, cfg: ModelConfig, mesh, *,
     # expert-weight specs must match repro.sharding.param_spec
     wspec = P(model_axis, None, None)
     out, aux = shard_map(
-        body, mesh=mesh,
+        body, mesh,
         in_specs=(P(data_axes, None), P(None, None), wspec, wspec, wspec),
         out_specs=(P(data_axes, None), P()),
-        check_vma=False,
     )(xt, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     return x + out.reshape(B, S, D), aux

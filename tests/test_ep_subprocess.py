@@ -32,10 +32,6 @@ print("EP_OK", err)
 """
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed-era shard_map(check_vma=...) kwarg rejected by the "
-           "installed jax 0.4.x (renamed from check_rep later)")
 def test_moe_ep_on_8_devices():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

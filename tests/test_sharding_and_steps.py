@@ -18,25 +18,14 @@ from repro.optim import adamw_init
 
 ARCHS = [a for a in list_configs() if a != "densenet-fl"]
 
-# The AbstractMesh-based spec tests fail since the seed commit: the
-# installed jax's AbstractMesh signature takes (name, size) pairs, not the
-# positional (shape, axis_names) these tests were written against.
-# Known-failing, not load-bearing for the FL protocol — marked xfail
-# (non-strict: they pass again under a jax that accepts this signature)
-# so the local `pytest -x -q` run matches the CI tier-1 gate.
-_ABSTRACT_MESH_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="seed-era AbstractMesh((16, 16), names) signature rejected by "
-           "the installed jax (expects (name, size) pairs)")
-
-
 def _fake_mesh():
-    """Abstract 16x16 mesh for spec computation only (no devices needed)."""
-    import numpy as _np
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    """Abstract 16x16 mesh for spec computation only (no devices needed) —
+    `repro.core.mesh.abstract_mesh` bridges the AbstractMesh signature
+    change across jax versions."""
+    from repro.core.mesh import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
-@_ABSTRACT_MESH_XFAIL
 @pytest.mark.parametrize("arch", ARCHS)
 def test_param_specs_divisible(arch):
     """Every sharded dim must divide by its mesh axis size."""
@@ -58,7 +47,6 @@ def test_param_specs_divisible(arch):
                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
-@_ABSTRACT_MESH_XFAIL
 @pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b"])
 def test_opt_specs_add_data_axis(arch):
     cfg = get_config(arch)
@@ -74,7 +62,6 @@ def test_opt_specs_add_data_axis(arch):
     assert n_data > 0, "ZeRO-1 data-axis sharding never applied"
 
 
-@_ABSTRACT_MESH_XFAIL
 def test_moe_expert_sharding_rules():
     mesh = _fake_mesh()
     qcfg = get_config("qwen3-moe-30b-a3b")     # 128 experts: expert-parallel

@@ -1,0 +1,294 @@
+"""Parity gates for the two PR-8 execution strategies: whole-experiment
+sweeps batched into one dispatch (`repro.fl.sweep`) and satellite-axis
+sharding across a device mesh (`repro.core.mesh` + engine `mesh=`).
+
+Both are pure performance features, so every test here is an identity
+test: the batched/sharded trajectory must be bit-identical to the
+sequential single-device one — the same standard
+tests/test_protocol_lockstep.py holds the fast loop to."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isl as ISL
+from repro.core import mesh as MM
+from repro.core.faults import FaultConfig, fault_trace, random_churn
+from repro.core.scheduler import FedSpaceScheduler, make_scheduler
+from repro.core.utility import RandomForestRegressor
+from repro.fl.engine import EngineConfig, SimulationEngine
+from repro.fl.sweep import sweep_engines
+from tests.test_protocol_lockstep import (ScriptedScheduler, _StubAdapter,
+                                          _budget)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    """This module lands at the tail of tier-1 and compiles several large
+    scan programs; after ~500 tests the accumulated in-process XLA
+    executables can crash CPU backend_compile (observed as a segfault
+    only in full-suite runs, never standalone). Start from a clean
+    compile cache so the module's programs build in a fresh compiler
+    state."""
+    jax.clear_caches()
+
+
+def _engine(C, sched, *, budget=None, isl=None, faults=None, mesh=None,
+            **cfg):
+    I, K = C.shape
+    return SimulationEngine(C, _StubAdapter(K), sched,
+                            EngineConfig(eval_every=I + 1, **cfg),
+                            link_budget=budget, isl=isl, faults=faults,
+                            mesh=mesh)
+
+
+def _assert_same_outcome(eng, res, out):
+    """Sequential engine (ran) vs one SweepOutcome: full protocol parity."""
+    s = out.result
+    np.testing.assert_array_equal(eng.version, out.version)
+    np.testing.assert_array_equal(eng.pending, out.pending)
+    np.testing.assert_array_equal(eng.buffered_base, out.buffered)
+    assert eng.ig == out.ig
+    assert res.staleness_hist.tolist() == s.staleness_hist.tolist()
+    assert res.idle_connections == s.idle_connections
+    assert res.total_connections == s.total_connections
+    assert res.num_global_updates == s.num_global_updates
+    assert res.num_aggregated_gradients == s.num_aggregated_gradients
+    assert res.windows_run == s.windows_run
+
+
+@st.composite
+def _variants(draw):
+    """2-4 scripted variants of independent shapes: same-shape ones land
+    in one vmapped group, odd ones in their own — both paths must agree
+    with the sequential reference either way."""
+    out = []
+    for _ in range(draw(st.integers(2, 4))):
+        K = draw(st.integers(2, 6))
+        I = draw(st.integers(4, 16))
+        C = np.array(draw(st.lists(st.lists(st.booleans(), min_size=K,
+                                            max_size=K), min_size=I,
+                                   max_size=I)), bool)
+        a = np.array(draw(st.lists(st.integers(0, 1), min_size=I,
+                                   max_size=I)), np.int32)
+        out.append((C, a))
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(_variants())
+def test_sweep_lockstep_with_sequential_runs(vs):
+    """The batched dispatch replays tests/test_protocol_lockstep.py's
+    reference: each variant of a random scripted grid comes back
+    bit-identical to its own sequential engine run."""
+    seq = []
+    for C, a in vs:
+        eng = _engine(C, ScriptedScheduler(a))
+        seq.append((eng, eng.run()))
+    outs = sweep_engines(
+        [_engine(C, ScriptedScheduler(a)) for C, a in vs])
+    for (eng, res), out in zip(seq, outs):
+        _assert_same_outcome(eng, res, out)
+
+
+def _rand_world(K=10, I=48, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.random((I, K)) < 0.3
+
+
+def test_sweep_odd_variant_count_mixed_schedulers():
+    """5 variants (not a power of two) interleaving scheduler kinds over
+    one world: grouping must split them by indicator and stitch results
+    back in input order."""
+    C = _rand_world()
+    scheds = [make_scheduler("fedbuff", M=3), make_scheduler("sync"),
+              make_scheduler("fedbuff", M=6), make_scheduler("periodic",
+                                                             period=4),
+              make_scheduler("async")]
+    seq = []
+    for s in scheds:
+        eng = _engine(C, s)
+        seq.append((eng, eng.run()))
+    outs = sweep_engines([_engine(C, s) for s in scheds])
+    schemes = [o.result.scheme for o in outs]
+    assert schemes == ["fedbuff", "sync", "fedbuff", "periodic", "async"]
+    for (eng, res), out in zip(seq, outs):
+        _assert_same_outcome(eng, res, out)
+
+
+def test_sweep_optional_columns_present_and_absent():
+    """One batch mixing every optional-column layout — plain geometry,
+    link budget, fault masks, sink relaying, gossip — against each
+    variant's sequential run."""
+    K, I = 12, 48
+    C = _rand_world(K, I, seed=1)
+    grants = (np.random.default_rng(2).integers(1, 4, C.shape)
+              .astype(np.int32)) * C
+    budget = _budget(C, grants, 2, 1)
+    trace = fault_trace(
+        FaultConfig(deorbit=random_churn(K, I, 0.3, seed=3)), I, K=K)
+    isl = ISL.ISL(ISL.identity_topology(K), relay_windows=2, epoch=12)
+
+    def build():
+        return [
+            _engine(C, make_scheduler("fedbuff", M=4)),
+            _engine(C, make_scheduler("fedbuff", M=4), budget=budget),
+            _engine(C, make_scheduler("fedbuff", M=4), faults=trace),
+            _engine(C, make_scheduler("fedbuff", M=4), budget=budget,
+                    faults=trace),
+            _engine(C, make_scheduler("intra_plane", M=4), isl=isl),
+            _engine(C, make_scheduler("isl_async", M=2), isl=isl),
+            _engine(C, make_scheduler("isl_async", M=2), isl=isl,
+                    faults=trace),
+        ]
+
+    seq = []
+    for eng in build():
+        seq.append((eng, eng.run()))
+    outs = sweep_engines(build())
+    for (eng, res), out in zip(seq, outs):
+        _assert_same_outcome(eng, res, out)
+
+
+def test_inherently_sequential_variants_raise():
+    """FedSpace replans mid-run (finite device-plan horizon) and host-only
+    schedulers have no plan at all: both must fail loudly, not diverge
+    silently."""
+    K, I = 4, 16
+    C = _rand_world(K, I, seed=4)
+    reg = RandomForestRegressor(n_trees=2, max_depth=3).fit(
+        np.random.default_rng(0).random((30, 11)).astype(np.float32),
+        np.random.default_rng(1).random(30).astype(np.float32))
+    fs = FedSpaceScheduler(reg, I0=8, num_candidates=8)
+    with pytest.raises(ValueError, match="not sweepable"):
+        sweep_engines([_engine(C, fs)])
+    a = np.ones(I, np.int32)
+    with pytest.raises(ValueError, match="not sweepable"):
+        sweep_engines([_engine(C, ScriptedScheduler(a, device=False))])
+
+
+def test_sweep_rejects_stop_at_target():
+    C = _rand_world(6, 16, seed=5)
+    eng = _engine(C, make_scheduler("sync"), target_acc=0.5)
+    with pytest.raises(ValueError, match="not sweepable"):
+        sweep_engines([eng])
+
+
+def test_mesh_single_device_identity():
+    """`mesh=sim_mesh()` on however many devices this process has (1 under
+    plain pytest) must not change a single bit of the trajectory — the
+    padding/sharding plumbing itself is exercised even at mesh size 1."""
+    K, I = 10, 48
+    C = _rand_world(K, I, seed=6)
+    grants = (np.random.default_rng(7).integers(1, 4, C.shape)
+              .astype(np.int32)) * C
+    trace = fault_trace(
+        FaultConfig(deorbit=random_churn(K, I, 0.25, seed=8)), I, K=K)
+    mesh = MM.sim_mesh()
+    for kw in ({}, {"budget": _budget(C, grants, 2, 1)},
+               {"faults": trace}):
+        ref = _engine(C, make_scheduler("fedbuff", M=4), **kw)
+        ref_res = ref.run()
+        shd = _engine(C, make_scheduler("fedbuff", M=4), mesh=mesh, **kw)
+        shd_res = shd.run()
+        np.testing.assert_array_equal(ref.version, shd.version)
+        np.testing.assert_array_equal(ref.pending, shd.pending)
+        np.testing.assert_array_equal(ref.buffered_base, shd.buffered_base)
+        assert ref.ig == shd.ig
+        assert ref_res.staleness_hist.tolist() == \
+            shd_res.staleness_hist.tolist()
+        assert ref_res.idle_connections == shd_res.idle_connections
+        assert ref_res.total_connections == shd_res.total_connections
+
+
+_MESH8_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import sys
+sys.path.insert(0, "src")
+import jax.numpy as jnp
+from repro.core import mesh as MM
+from repro.core.connectivity import LinkBudget
+from repro.core.faults import FaultConfig, fault_trace, random_churn
+from repro.core.scheduler import make_scheduler
+from repro.core.search import score_candidates
+from repro.core import staleness as SS
+from repro.fl.engine import EngineConfig, SimulationEngine
+
+class _StubAdapter:          # protocol-only runs: training is a no-op
+    def __init__(self, K): self.clients = list(range(K))
+    def init(self, key): return {"w": jnp.zeros((2,))}
+    def loss(self, params, batch):
+        return jnp.sum(params["w"]) * 0.0 + jnp.sum(batch) * 0.0
+    def client_batch(self, ci, round_rng, batch_size, num_batches):
+        return jnp.zeros((num_batches, 1))
+    def accuracy(self, params): return 0.0
+    def val_loss(self, params): return 0.0
+
+def _budget(C, grants, need_up, need_dn):
+    return LinkBudget(visible=C, served=C,
+                      assign=np.where(C, 0, -1).astype(np.int32),
+                      grants=grants, need_up=need_up, need_dn=need_dn)
+
+K, I = 36, 48                      # 36 % 8 != 0: exercises K padding
+rng = np.random.default_rng(0)
+C = rng.random((I, K)) < 0.3
+grants = rng.integers(1, 4, C.shape).astype(np.int32) * C
+trace = fault_trace(
+    FaultConfig(deorbit=random_churn(K, I, 0.25, seed=1)), I, K=K)
+mesh = MM.sim_mesh()
+assert MM.mesh_size(mesh) == 8, MM.mesh_size(mesh)
+
+def run(mesh, **kw):
+    eng = SimulationEngine(C, _StubAdapter(K), make_scheduler("fedbuff",
+                                                              M=6),
+                           EngineConfig(eval_every=I + 1),
+                           mesh=mesh, **kw)
+    res = eng.run()
+    return eng, res
+
+for kw in ({}, {"link_budget": _budget(C, grants, 2, 1)},
+           {"faults": trace}):
+    ref, ref_res = run(None, **kw)
+    shd, shd_res = run(mesh, **kw)
+    assert np.array_equal(ref.version, shd.version)
+    assert np.array_equal(ref.pending, shd.pending)
+    assert np.array_equal(ref.buffered_base, shd.buffered_base)
+    assert ref.ig == shd.ig
+    assert ref_res.staleness_hist.tolist() == \
+        shd_res.staleness_hist.tolist()
+    assert ref_res.idle_connections == shd_res.idle_connections
+
+from repro.core.utility import RandomForestRegressor
+reg = RandomForestRegressor(n_trees=2, max_depth=3).fit(
+    rng.random((30, 11)).astype(np.float32),
+    rng.random(30).astype(np.float32))
+cand = rng.integers(0, 2, (16, 24)).astype(np.int32)
+state = SS.bootstrap_state(K)
+s1 = score_candidates(cand, C[:24], state, 0, reg, 0.5, s_max=8)
+s2 = score_candidates(cand, C[:24], state, 0, reg, 0.5, s_max=8,
+                      mesh=mesh)
+assert np.array_equal(np.asarray(s1), np.asarray(s2))
+print("MESH8_OK")
+"""
+
+
+def test_mesh_8_device_subprocess():
+    """Forced 8-device CPU mesh in a fresh subprocess (device count locks
+    at first jax init): sharded engine runs — including a K (36) that the
+    mesh does not divide — and the sharded eq.-13 scorer must be
+    bit-identical to single-device."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _MESH8_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MESH8_OK" in r.stdout
