@@ -56,6 +56,14 @@ vectorized/device-resident path, with machine-readable output.
    fedspace / intra-plane on starlink40 over dense12 under *blind*
    satellite churn, a total station blackout, and weather-degraded
    links, gated on churn measurably reducing aggregated gradients.
+9. **Real payloads** (transformer clients + compression-aware links):
+   (a) the parity gate — a transformer federation (Pallas-dispatch
+   forward, finite link budget) with `uplink_topk` unset, explicitly
+   0.0, and under both engine strategies must produce one bit-identical
+   trajectory and final model; (b) the bytes-on-the-wire study —
+   starlink40 over sparse1 sweeping model family x compression ratio x
+   scheduler, gated on compression cutting `need_up` and shifting the
+   aggregated-gradient counts.
 
 Every section registers itself in `SECTIONS`; the runner iterates the
 registry and fails if a registered section is missing from the report, so
@@ -1198,6 +1206,157 @@ def bench_sweep_scaling(smoke: bool) -> dict:
         "per_variant_identical": bool(identical),
         "mesh_gate": gate,
     }
+
+
+# ---------------------------------------------------------------------------
+# 10. real payloads: compression-off parity gate + bytes-on-the-wire study
+
+
+def _payload_exp(*, preset="", num_satellites=10, ground="", days,
+                 adapter_kind="transformer", adapter_params=None,
+                 scheduler="fedbuff", sched_params=None, model_mb=300.0,
+                 topk=0.0, int8=False, train_topk=None, fast=True,
+                 windows, eval_every, num_train=240, num_val=80,
+                 local_steps=2):
+    from repro.fl.api import (AdapterConfig, ConstellationConfig,
+                              DatasetConfig, FLExperiment, LinkConfig,
+                              SchedulerConfig)
+    return FLExperiment(
+        constellation=ConstellationConfig(num_satellites=num_satellites,
+                                          days=days, preset=preset,
+                                          ground=ground),
+        dataset=DatasetConfig(num_train=num_train, num_val=num_val),
+        adapter=AdapterConfig(kind=adapter_kind,
+                              params=dict(adapter_params or {})),
+        scheduler=SchedulerConfig(kind=scheduler,
+                                  params=dict(sched_params or {})),
+        train=EngineConfig(eval_every=eval_every, max_windows=windows,
+                           local_steps=local_steps, fast_loop=fast,
+                           uplink_topk=train_topk),
+        link=LinkConfig(uplink_topk=topk, uplink_int8=int8,
+                        uplink_mbps=20.0, downlink_mbps=100.0,
+                        model_mb=model_mb, gs_capacity=1),
+    )
+
+
+def _payload_run(exp):
+    from repro.fl.api import Federation
+    fed = Federation.from_experiment(exp)
+    eng = fed.engine()
+    t0 = time.perf_counter()
+    res = eng.run()
+    return fed, eng, res, time.perf_counter() - t0
+
+
+@section("payloads",
+         parity=lambda r: r["compression_off_trajectory_identical"]
+         and r.get("need_up_reduced", True)
+         and r.get("agg_gradients_shift", True))
+def bench_payloads(smoke: bool) -> dict:
+    """(a) Parity gate: a transformer federation — Pallas-dispatch forward,
+    real client batches, a finite link budget — run with `uplink_topk`
+    unset (None), an explicit 0.0, and under both engine strategies must
+    produce one bit-identical trajectory AND bit-identical final model
+    parameters: compression off is the absence of the feature, not a
+    cheap approximation of it. (b) Bytes-on-the-wire study (full runs
+    only): starlink40 over the single sparse1 station under a finite
+    budget, sweeping model family (mlp vs transformer, with their wire
+    sizes) x compression (off / top-k 0.25 / dense int8) x scheduler
+    (fedbuff / async) — gated on compression measurably cutting
+    `need_up` and shifting the aggregated-gradient counts, the coupling
+    a bytes-blind contact model cannot express."""
+    from repro.fl.compression import uplink_bytes_ratio
+
+    # (a) compression-off parity, both sentinels x both strategies
+    gate_kw = dict(num_satellites=10, days=0.25, windows=24, eval_every=12)
+    gp = {"d_model": 16, "num_layers": 1, "num_heads": 2,
+          "num_kv_heads": 1, "d_ff": 32}
+    _, e0, r0, t_ref = _payload_run(_payload_exp(
+        adapter_params=gp, train_topk=None, fast=True, **gate_kw))
+    parity = True
+    t_variants = 0.0
+    for train_topk, fast in ((0.0, True), (None, False), (0.0, False)):
+        _, e1, r1, t1 = _payload_run(_payload_exp(
+            adapter_params=gp, train_topk=train_topk, fast=fast, **gate_kw))
+        t_variants += t1
+        parity = (parity and _same_trajectory(e0, e1, r0, r1)
+                  and r0.accuracy == r1.accuracy
+                  and all(np.array_equal(np.asarray(a), np.asarray(b))
+                          for a, b in zip(jax.tree.leaves(e0.params),
+                                          jax.tree.leaves(e1.params))))
+    print(f"payloads: compression-off gate ref {t_ref:.3f}s, variants "
+          f"{t_variants:.3f}s, trajectory_identical={bool(parity)}",
+          flush=True)
+    out = {
+        "gate_K": 10, "gate_windows": 24,
+        "t_gate_ref_s": t_ref,
+        "t_gate_variants_s": t_variants,
+        "compression_off_trajectory_identical": bool(parity),
+    }
+    if smoke:
+        return out
+
+    # (b) the study: one constellation/station world, model x compression
+    # x scheduler. Wire sizes are per family (the transformer pytree is
+    # the heavy payload); compression rescales the effective upload bytes
+    # through `uplink_bytes_ratio`, so `need_up` — and with it how often
+    # uploads complete inside a pass — moves with the ratio.
+    models = {
+        "mlp": ({"hidden": 64}, 300.0),
+        "transformer": ({}, 600.0),          # default decoder stack
+    }
+    compression = {
+        "off": dict(topk=0.0, int8=False),
+        "topk25": dict(topk=0.25, int8=False),
+        "int8": dict(topk=0.0, int8=True),
+    }
+    scheds = {
+        "fedbuff": ("fedbuff", {"M": 2}),
+        "async": ("async", {}),
+    }
+    days, windows = 2.0, 192
+    cells = {}
+    for mname, (mp, mb) in models.items():
+        for cname, ckw in compression.items():
+            for sname, (skind, skw) in scheds.items():
+                fed, eng, res, t = _payload_run(_payload_exp(
+                    preset="starlink40", ground="sparse1", days=days,
+                    windows=windows, eval_every=windows,
+                    adapter_kind=mname, adapter_params=mp, model_mb=mb,
+                    scheduler=skind, sched_params=skw,
+                    num_train=600, num_val=200, **ckw))
+                b = fed.link_budget
+                cells[f"{mname}/{cname}/{sname}"] = {
+                    "model_mb": mb,
+                    "bytes_ratio": uplink_bytes_ratio(
+                        ckw["topk"], int8=ckw["int8"]),
+                    "need_up": b.need_up, "need_dn": b.need_dn,
+                    "global_updates": res.num_global_updates,
+                    "aggregated_gradients": res.num_aggregated_gradients,
+                    "idle_fraction": res.idle_connections
+                    / max(res.total_connections, 1),
+                    "final_accuracy": res.accuracy[-1],
+                    "t_run_s": t,
+                }
+                c = cells[f"{mname}/{cname}/{sname}"]
+                print(f"payloads {mname}/{cname}/{sname}: need_up "
+                      f"{c['need_up']}, grads {c['aggregated_gradients']}, "
+                      f"acc {c['final_accuracy']:.3f}", flush=True)
+    need_up_reduced = all(
+        cells[f"{m}/{c}/{s}"]["need_up"] < cells[f"{m}/off/{s}"]["need_up"]
+        for m in models for c in ("topk25", "int8") for s in scheds)
+    agg_shift = any(
+        cells[f"{m}/{c}/{s}"]["aggregated_gradients"]
+        != cells[f"{m}/off/{s}"]["aggregated_gradients"]
+        for m in models for c in ("topk25", "int8") for s in scheds)
+    out.update({
+        "study_preset": "starlink40", "study_ground": "sparse1",
+        "study_windows": windows,
+        "study_cells": cells,
+        "need_up_reduced": bool(need_up_reduced),
+        "agg_gradients_shift": bool(agg_shift),
+    })
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -403,13 +403,20 @@ def link_budget(spec: ConstellationSpec, *, days: float,
                 uplink_mbps: float = 0.0, downlink_mbps: float = 0.0,
                 model_mb: float = 0.0, gs_capacity: int = 0,
                 t0_s: float = 900.0, substep_s: float = 60.0,
-                counts: Optional[np.ndarray] = None) -> LinkBudget:
+                counts: Optional[np.ndarray] = None,
+                uplink_mb: Optional[float] = None) -> LinkBudget:
     """Derive the capacity-resolved transfer layer for a constellation:
     station-level contact times (`station_windows`), deterministic
     contention (`resolve_contention`), and the per-direction unit needs
     (`transfer_windows`). The zero sentinels (rates/model size 0 =
     instantaneous, capacity 0 = unlimited) degrade each constraint
     independently; with all of them zero the budget gates nothing.
+
+    `uplink_mb` overrides the *uploaded* payload size (default: the full
+    `model_mb`) — satellites uplink updates, which compression shrinks,
+    while the downlink still carries the full model. The experiment layer
+    passes `model_mb * uplink_bytes_ratio(...)` here, which is how a
+    compressed update genuinely needs fewer contact units.
 
     `counts` accepts a precomputed `station_windows` result (callers that
     also need the per-station counts — e.g. the fault layer's station-up
@@ -422,10 +429,11 @@ def link_budget(spec: ConstellationSpec, *, days: float,
     grants = np.where(
         served, np.take_along_axis(counts, np.maximum(assign, 0)[..., None],
                                    axis=2)[..., 0], 0).astype(np.int32)
+    up_mb = model_mb if uplink_mb is None else uplink_mb
     return LinkBudget(
         visible=counts.max(axis=2) > 0, served=served, assign=assign,
         grants=grants,
-        need_up=transfer_windows(uplink_mbps, model_mb, substep_s),
+        need_up=transfer_windows(uplink_mbps, up_mb, substep_s),
         need_dn=transfer_windows(downlink_mbps, model_mb, substep_s))
 
 

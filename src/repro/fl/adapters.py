@@ -11,10 +11,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ModelConfig, StageSpec
 from repro.data.fmow import NUM_CLASSES, SyntheticFmow
 from repro.data.pipeline import ClientDataset
 from repro.fl.registry import register_adapter
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_op
+from repro.models import attention as A
 from repro.models import densenet as DN
+from repro.models import layers as L
+from repro.models import transformer as TF
 
 
 def _xent(logits, labels):
@@ -180,3 +186,74 @@ class DenseNetFmowAdapter(MlpFmowAdapter):
     def val_loss(self, params, max_n: int = 1024) -> float:
         return float(self.loss(params,
                                (self._val_X[:max_n], self._val_y[:max_n])))
+
+
+@register_adapter("transformer")
+class TransformerFmowAdapter(MlpFmowAdapter):
+    """Real payload on the wire: a small decoder stack
+    (`repro.models.transformer` blocks — GQA attention with RoPE, swiglu
+    FFN) classifying each fMoW feature vector as a token sequence, with
+    the forward routed through the in-repo kernel dispatch
+    (`kernels/flash_attention`, `kernels/rmsnorm`: compiled Pallas
+    kernels on TPU, bit-identical jnp oracles everywhere else). Parameter
+    pytrees are ~2 orders of magnitude heavier than the MLP's, so uplink
+    compression and the link-budget byte accounting act on something
+    real. Data plumbing (client batches, eval slices) is inherited from
+    `MlpFmowAdapter` unchanged — the adapter contract is the same."""
+
+    name = "transformer"
+
+    def __init__(self, data: SyntheticFmow, clients: List[ClientDataset],
+                 d_model: int = 32, num_layers: int = 2, num_heads: int = 4,
+                 num_kv_heads: int = 2, d_ff: int = 64, seq_len: int = 8):
+        super().__init__(data, clients)
+        F = self._X_train.shape[1]
+        # the feature vector is read as a sequence of S tokens of width
+        # F/S; S is the largest value <= seq_len that divides F
+        S = min(seq_len, F)
+        while F % S:
+            S -= 1
+        self.seq_len = S
+        self.cfg = ModelConfig(
+            name="fl-transformer", arch_type="dense",
+            num_layers=num_layers, d_model=d_model, num_heads=num_heads,
+            num_kv_heads=num_kv_heads, d_ff=d_ff, vocab_size=NUM_CLASSES,
+            stages=(StageSpec(("global",), num_layers),),
+            param_dtype="float32")
+        self.cfg.validate()
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        F, S = self._X_train.shape[1], self.seq_len
+        return {
+            "w_in": L.dense_init(ks[0], F // S, cfg.d_model, jnp.float32),
+            "stage": TF.stage_init(ks[1], cfg, cfg.stages[0]),
+            "final_norm": L.rmsnorm_init(cfg.d_model, jnp.float32),
+            "head_w": L.dense_init(ks[2], cfg.d_model, NUM_CLASSES,
+                                   jnp.float32),
+            "head_b": jnp.zeros(NUM_CLASSES),
+        }
+
+    def apply(self, params, X):
+        cfg = self.cfg
+        B, S = X.shape[0], self.seq_len
+        x = X.reshape(B, S, -1) @ params["w_in"]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def block(h, rep):
+            # pre-norm attention + residual, with the normalization and
+            # the attention itself on the kernel dispatch path
+            a = rep["pos0"]["attn"]
+            hn = rmsnorm_op(h, a["norm"]["scale"], cfg.norm_eps)
+            q, k, v = A._project_qkv(a, hn, cfg, positions)
+            o = flash_attention_bshd(q, k, v, causal=True, bq=S, bk=S)
+            h = h + o.reshape(B, S, -1) @ a["wo"]
+            f = rep["pos0"]["ffn"]
+            hn = rmsnorm_op(h, f["norm"]["scale"], cfg.norm_eps)
+            h = h + L.mlp_apply(f["mlp"], hn, cfg.mlp_act)
+            return h, None
+
+        x, _ = jax.lax.scan(block, x, params["stage"])
+        x = rmsnorm_op(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return x[:, -1, :] @ params["head_w"] + params["head_b"]

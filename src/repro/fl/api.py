@@ -44,6 +44,7 @@ from repro.data.fmow import FmowSpec, SyntheticFmow
 from repro.data.partition import iid_partition, noniid_partition
 from repro.data.pipeline import make_clients
 import repro.fl.adapters  # noqa: F401 — registers the built-in adapters
+from repro.fl.compression import uplink_bytes_ratio
 from repro.fl.engine import EngineConfig, SimResult, SimulationEngine
 from repro.fl.registry import (ADAPTERS, PARTITIONS, SCHEDULERS,
                                register_partition)
@@ -157,6 +158,7 @@ class LinkConfig:
     `repro.core.connectivity.LinkBudget` consumed by the engine, the
     schedulers, and the eq.-13 schedule search."""
     uplink_topk: float = 0.0      # >0: top-k+int8 compressed uplink
+    uplink_int8: bool = False     # dense int8 uplink (when no top-k)
     uplink_mbps: float = 0.0      # sat->GS rate; 0 = unconstrained
     downlink_mbps: float = 0.0    # GS->sat rate; 0 = unconstrained
     model_mb: float = 0.0         # model transfer size; 0 = instantaneous
@@ -168,6 +170,9 @@ class LinkConfig:
             v = getattr(self, name)
             if v < 0:
                 raise ValueError(f"LinkConfig.{name} must be >= 0, got {v}")
+        if self.uplink_topk > 1:
+            raise ValueError(f"LinkConfig.uplink_topk must be in [0, 1], "
+                             f"got {self.uplink_topk}")
 
     @property
     def constrained(self) -> bool:
@@ -303,11 +308,21 @@ class Federation:
                 # (station-up reach); share one propagation sweep with
                 # the budget instead of running it twice
                 counts = CN.station_windows(spec, days=days)
+            # uploads carry compressed updates: the effective uplink
+            # payload shrinks by the analytic bytes ratio of the resolved
+            # compression settings (train fields win over LinkConfig, the
+            # same precedence `engine()` applies), so fewer contact units
+            # complete an upload. Ratio 1.0 leaves need_up bit-identical.
+            tk = exp.train.uplink_topk
+            topk = tk if tk is not None else lk.uplink_topk
+            i8 = exp.train.uplink_int8
+            int8 = bool(i8 if i8 is not None else lk.uplink_int8)
             budget = CN.link_budget(
                 spec, days=days,
                 uplink_mbps=lk.uplink_mbps, downlink_mbps=lk.downlink_mbps,
                 model_mb=lk.model_mb, gs_capacity=lk.gs_capacity,
-                counts=counts)
+                counts=counts,
+                uplink_mb=lk.model_mb * uplink_bytes_ratio(topk, int8=int8))
             C = budget.visible
         else:
             spec, C = exp.constellation.build()
@@ -434,7 +449,10 @@ class Federation:
         seed = cfg.seed if cfg.seed is not None else exp.seed
         topk = cfg.uplink_topk if cfg.uplink_topk is not None \
             else exp.link.uplink_topk
-        cfg = dataclasses.replace(cfg, seed=seed, uplink_topk=topk)
+        int8 = cfg.uplink_int8 if cfg.uplink_int8 is not None \
+            else exp.link.uplink_int8
+        cfg = dataclasses.replace(cfg, seed=seed, uplink_topk=topk,
+                                  uplink_int8=int8)
         return SimulationEngine(self.C, self.adapter, self.scheduler, cfg,
                                 callbacks=callbacks,
                                 init_params=init_params,

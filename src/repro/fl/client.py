@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.fl.compression import roundtrip
+from repro.fl.compression import roundtrip, roundtrip_int8
 
 
 def _make_update_fn(adapter, *, lr: float, trainable_mask=None):
@@ -52,14 +52,16 @@ def make_client_update(adapter, *, local_steps: int, lr: float,
 
 
 def make_batched_client_update(adapter, *, local_steps: int, lr: float,
-                               trainable_mask=None, uplink_topk: float = 0.0):
+                               trainable_mask=None, uplink_topk: float = 0.0,
+                               uplink_int8: bool = False):
     """Returns update_many(base_params, batches) -> stacked g_k.
 
     `batches` is the per-satellite batch pytree stacked on a leading axis M;
     the base model is shared (broadcast). One jitted program trains all M
-    satellites and, when `uplink_topk > 0`, applies the top-k/int8 uplink
-    roundtrip to each update before returning — no per-satellite dispatch,
-    no host round-trip between training and compression.
+    satellites and, when `uplink_topk > 0` (or `uplink_int8`), applies the
+    top-k/int8 (or dense-int8) uplink roundtrip to each update before
+    returning — no per-satellite dispatch, no host round-trip between
+    training and compression. Top-k takes precedence over dense int8.
     """
     update_fn = _make_update_fn(adapter, lr=lr,
                                 trainable_mask=trainable_mask)
@@ -69,6 +71,8 @@ def make_batched_client_update(adapter, *, local_steps: int, lr: float,
         u = jax.vmap(update_fn, in_axes=(None, 0))(base_params, batches)
         if uplink_topk > 0.0:
             u = jax.vmap(lambda t: roundtrip(t, uplink_topk)[0])(u)
+        elif uplink_int8:
+            u = jax.vmap(lambda t: roundtrip_int8(t)[0])(u)
         return u
 
     return update_many

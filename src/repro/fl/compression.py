@@ -69,3 +69,67 @@ def roundtrip(update, k_frac: float = 0.1):
     top-k/int8 compression. Returns (lossy update, compression ratio)."""
     comp, b_c, b_r = compress_topk_int8(update, k_frac)
     return decompress(comp), b_r / max(b_c, 1)
+
+
+class QuantLeaf(NamedTuple):
+    values: jnp.ndarray     # int8 quantized dense values (leaf shape)
+    scale: jnp.ndarray      # () f32 dequant scale
+    shape: tuple
+
+
+def compress_int8(update):
+    """Dense symmetric int8 quantization, per-leaf scale (no sparsity).
+
+    Returns (compressed pytree, bytes_compressed, bytes_raw); the wire
+    format is one int8 per entry plus one f32 scale per leaf.
+    """
+    total_raw = 0
+    total_comp = 0
+
+    def one(u):
+        nonlocal total_raw, total_comp
+        flat = u.reshape(-1).astype(jnp.float32)
+        n = flat.shape[0]
+        scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        total_raw += n * 4
+        total_comp += n * 1 + 4     # int8 values + f32 scale
+        return QuantLeaf(values=q, scale=scale, shape=tuple(u.shape))
+
+    comp = jax.tree.map(one, update)
+    return comp, total_comp, total_raw
+
+
+def decompress_int8(comp):
+    def one(c):
+        return (c.values.astype(jnp.float32) * c.scale).reshape(c.shape)
+
+    return jax.tree.map(one, comp,
+                        is_leaf=lambda x: isinstance(x, QuantLeaf))
+
+
+def roundtrip_int8(update):
+    """Dense-int8 analogue of `roundtrip`: (lossy update, ratio)."""
+    comp, b_c, b_r = compress_int8(update)
+    return decompress_int8(comp), b_r / max(b_c, 1)
+
+
+def uplink_bytes_ratio(k_frac: float = 0.0, *, int8: bool = False) -> float:
+    """Analytic compressed/raw bytes ratio of one uplinked update.
+
+    Mirrors the per-leaf accounting of `compress_topk_int8` /
+    `compress_int8` in the large-leaf limit, where the per-leaf scale is
+    amortized away: raw entries cost 4 bytes (f32); a kept top-k entry
+    costs 5 (int8 value + int32 index), so top-k lands at
+    ``k_frac * 5 / 4``; dense int8 keeps every entry at 1 byte, so 1/4.
+    ``k_frac`` in {0, None} with ``int8=False`` is the uncompressed wire
+    (ratio 1.0). Top-k takes precedence over ``int8`` — its kept values
+    are already int8-quantized. The link-budget layer multiplies
+    `LinkConfig.model_mb` by this ratio to get the effective upload size
+    feeding `transfer_windows`/`LinkGate.need_up`.
+    """
+    if k_frac:
+        return float(k_frac) * 5.0 / 4.0
+    if int8:
+        return 1.0 / 4.0
+    return 1.0

@@ -355,10 +355,21 @@ class EngineConfig:
     seed: Optional[int] = None           # unset -> 0
     stop_at_target: bool = True
     uplink_topk: Optional[float] = None  # >0: compressed uplink; unset -> 0
+    # dense int8 uplink quantization (ignored when uplink_topk > 0, whose
+    # kept values are already int8); unset -> False / LinkConfig fallback
+    uplink_int8: Optional[bool] = None
     # False forces the per-window host loop even when the chunked jitted
     # fast loop would apply — e.g. for callbacks that must observe the
     # device state at every single window boundary
     fast_loop: bool = True
+
+    def __post_init__(self):
+        # 0.0 stays legal alongside None: the engine resolves the unset
+        # sentinel to 0.0 via dataclasses.replace, which re-runs this hook
+        v = self.uplink_topk
+        if v is not None and v != 0.0 and not 0.0 < v <= 1.0:
+            raise ValueError(
+                f"EngineConfig.uplink_topk must be in (0, 1], got {v}")
 
 
 class RunArtifacts(NamedTuple):
@@ -493,7 +504,8 @@ class SimulationEngine:
         cfg = dataclasses.replace(
             cfg, seed=0 if cfg.seed is None else cfg.seed,
             uplink_topk=(0.0 if cfg.uplink_topk is None
-                         else cfg.uplink_topk))
+                         else cfg.uplink_topk),
+            uplink_int8=bool(cfg.uplink_int8))
         self.config = cfg
         self.link_budget = link_budget
         self.isl = isl
@@ -587,7 +599,8 @@ class SimulationEngine:
             trainable_mask=mask)
         self._batched_update = make_batched_client_update(
             self.adapter, local_steps=cfg.local_steps, lr=cfg.client_lr,
-            trainable_mask=mask, uplink_topk=cfg.uplink_topk)
+            trainable_mask=mask, uplink_topk=cfg.uplink_topk,
+            uplink_int8=bool(cfg.uplink_int8))
 
         self.store = DeviceCheckpointStore(ring=cfg.s_max + 26)
         self.store.put(0, self.params)

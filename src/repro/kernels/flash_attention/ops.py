@@ -12,12 +12,24 @@ from repro.kernels.flash_attention.ref import attention_ref
 def flash_attention_bshd(q, k, v, *, causal=True, window=0, bq=512, bk=512,
                          interpret=None):
     """q: (B, S, H, hd); k, v: (B, T, K, hd) — the transformer-stack layout.
-    Transposes to (B, H, S, hd) for the kernel."""
-    if interpret is None:
-        interpret = not on_tpu()
+    Transposes to (B, H, S, hd) for the kernel.
+
+    Dispatch mirrors `repro.kernels.agg.ops`: with `interpret=None` (the
+    default) the compiled Pallas kernel runs on TPU and the pure-jnp
+    oracle (`attention_ref`) everywhere else, keeping off-TPU FL runs
+    bit-reproducible; an explicit `interpret=True` forces the Pallas
+    interpreter (kernel debugging — close to, not bit-identical with, the
+    oracle)."""
     qt = jnp.moveaxis(q, 2, 1)
     kt = jnp.moveaxis(k, 2, 1)
     vt = jnp.moveaxis(v, 2, 1)
+    if interpret is None:
+        if on_tpu():
+            interpret = False
+        else:
+            return jnp.moveaxis(
+                attention_ref(qt, kt, vt, causal=causal, window=window),
+                1, 2)
     out = flash_attention(qt, kt, vt, causal=causal, window=window, bq=bq,
                           bk=bk, interpret=interpret)
     return jnp.moveaxis(out, 1, 2)

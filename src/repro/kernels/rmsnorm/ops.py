@@ -7,6 +7,13 @@ from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 
 def rmsnorm(x, scale, eps: float = 1e-6, *, interpret=None):
+    """Dispatch mirrors `repro.kernels.agg.ops`: `interpret=None` (the
+    default) runs the compiled Pallas kernel on TPU and the pure-jnp
+    oracle (`rmsnorm_ref`) everywhere else; explicit `interpret=True`
+    forces the Pallas interpreter."""
     if interpret is None:
-        interpret = not on_tpu()
+        if on_tpu():
+            interpret = False
+        else:
+            return rmsnorm_ref(x, scale, eps)
     return _kernel(x, scale, eps, interpret=interpret)

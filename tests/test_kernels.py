@@ -114,3 +114,79 @@ def test_flash_block_shape_invariance(key):
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# FL-payload shapes + ops-layer dispatch (the transformer adapter's hot
+# path: tiny sequences, narrow heads — far off the LLM-shaped sweeps above)
+
+
+def test_rmsnorm_fl_shape_parity(key):
+    """TransformerFmowAdapter hidden states: (B, S, d_model) = (32, 8, 32)."""
+    x = jax.random.normal(key, (32, 8, 32))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (32,))
+    out = rmsnorm(x, s, rows=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rmsnorm_ref(x, s)),
+                               atol=2e-5)
+
+
+def test_flash_fl_shape_parity(key):
+    """Adapter attention shapes: B=32 clients*batch, H=4, K=2 (GQA),
+    S=8 tokens, hd=8 — the kernel must clamp its tiles to the tiny
+    sequence and still match the oracle."""
+    B, H, K, S, hd = 32, 4, 2, 8, 8
+    q = jax.random.normal(key, (B, H, S, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd))
+    out = flash_attention(q, kk, vv, causal=True, bq=S, bk=S, interpret=True)
+    ref = attention_ref(q, kk, vv, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_ops_dispatch_bit_identical_to_oracle_off_tpu(key):
+    """`interpret=None` (the FL default) must BE the jnp oracle off-TPU —
+    bit-identical, not allclose — so simulation trajectories through the
+    transformer adapter stay reproducible on CPU CI."""
+    from repro.kernels import on_tpu
+    from repro.kernels.flash_attention.ops import flash_attention_bshd
+    from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_op
+    if on_tpu():
+        pytest.skip("off-TPU dispatch path")
+    x = jax.random.normal(key, (32, 8, 32))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (32,))
+    assert np.array_equal(np.asarray(rmsnorm_op(x, s)),
+                          np.asarray(rmsnorm_ref(x, s)))
+    B, H, K, S, hd = 4, 4, 2, 8, 8
+    # ops layer takes the model's (B, S, H, hd) layout
+    q = jax.random.normal(key, (B, S, H, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
+    got = flash_attention_bshd(q, kk, vv, causal=True)
+    ref = jnp.moveaxis(attention_ref(jnp.moveaxis(q, 2, 1),
+                                     jnp.moveaxis(kk, 2, 1),
+                                     jnp.moveaxis(vv, 2, 1), causal=True),
+                       1, 2)
+    assert got.shape == q.shape
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_ops_interpret_true_close_to_oracle(key):
+    """Explicit `interpret=True` routes through the Pallas interpreter:
+    numerically close to — though not bit-identical with — the oracle."""
+    from repro.kernels.flash_attention.ops import flash_attention_bshd
+    from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_op
+    x = jax.random.normal(key, (16, 8, 32))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (32,))
+    np.testing.assert_allclose(np.asarray(rmsnorm_op(x, s, interpret=True)),
+                               np.asarray(rmsnorm_ref(x, s)), atol=2e-5)
+    B, H, K, S, hd = 2, 4, 2, 8, 8
+    q = jax.random.normal(key, (B, S, H, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, hd))
+    got = flash_attention_bshd(q, kk, vv, causal=True, bq=S, bk=S,
+                               interpret=True)
+    ref = jnp.moveaxis(attention_ref(jnp.moveaxis(q, 2, 1),
+                                     jnp.moveaxis(kk, 2, 1),
+                                     jnp.moveaxis(vv, 2, 1), causal=True),
+                       1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
