@@ -64,6 +64,15 @@ vectorized/device-resident path, with machine-readable output.
    starlink40 over sparse1 sweeping model family x compression ratio x
    scheduler, gated on compression cutting `need_up` and shifting the
    aggregated-gradient counts.
+10. **Replan service** (incremental eq.-13 replanning): (a) the parity
+   gate — at every consecutive-window request the schedule selected by
+   `repro.fl.replan.ReplanService` (delta-window scoring over the cached
+   scan) must be bit-identical to a full `score_candidates` +
+   `select_candidate` rescan of the service's live pool, with at least
+   one request answered by the delta path; (b) the latency study — warm
+   delta answer time vs the full-rescan time at the serving shapes
+   (K=1000 satellites, R=20000 candidates, I0=24), plus the deferred
+   `maintain()` cost the delta path keeps off the answer path.
 
 Every section registers itself in `SECTIONS`; the runner iterates the
 registry and fails if a registered section is missing from the report, so
@@ -1356,6 +1365,95 @@ def bench_payloads(smoke: bool) -> dict:
         "need_up_reduced": bool(need_up_reduced),
         "agg_gradients_shift": bool(agg_shift),
     })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 11. incremental replan service: delta-vs-full parity gate + latency study
+
+
+@section("replan",
+         parity=lambda r: r["selection_identical"] and r["delta_steps"] >= 1)
+def bench_replan(smoke: bool) -> dict:
+    """Incremental replanning (`repro.fl.replan.ReplanService`): on each
+    consecutive aggregation event the service reuses the cached rollout
+    prefix over the overlapping horizon and simulates only the newly
+    revealed window. Parity: every answered schedule must be bit-identical
+    to a full `score_candidates` + `select_candidate` rescan of the
+    service's own live pool from the caller's state, and at least one
+    request must have taken the delta path. The study reports the warm
+    delta answer latency against the full-rescan latency at the same
+    shapes (the serving claim in docs/replanning.md), plus the deferred
+    `maintain()` cost."""
+    from repro.core.search import score_candidates, select_candidate
+    from repro.fl.replan import ReplanService
+
+    K = 16 if smoke else 1000         # starlink1000 scale
+    R = 256 if smoke else 20000       # serving-scale candidate pool
+    I0 = 8 if smoke else 24
+    steps = 8
+    s_max = 8
+    rf = _fit_search_regressor(s_max=s_max)
+    rng = np.random.default_rng(0)
+    C = rng.random((I0 + steps, K)) < 0.15
+
+    svc = ReplanService(rf, I0=I0, num_candidates=R, n_min=4, n_max=8,
+                        s_max=s_max, seed=3,
+                        min_pool=16 if smoke else 256)
+    state = jax.tree.map(np.asarray, SS.bootstrap_state(K))
+    ig = 0
+    draw_rng = np.random.default_rng(7)
+
+    identical = True
+    t_delta, t_maintain, t_full = [], [], []
+    for i in range(steps):
+        Cw = C[i:i + I0]
+        t0 = time.perf_counter()
+        plan = svc.replan(i, Cw, state, ig, 1.0, rng=draw_rng)
+        t_ans = time.perf_counter() - t0
+        if svc.last_mode == "delta":
+            t_delta.append(t_ans)
+            t0 = time.perf_counter()
+            svc.maintain()               # deferred advance, off the answer
+            t_maintain.append(time.perf_counter() - t0)
+        # the gate: full rescan of the live pool from the caller's state
+        pool = svc.pool
+        t0 = time.perf_counter()
+        scores = score_candidates(pool, Cw, state, ig, rf, 1.0,
+                                  s_max=s_max)
+        w = select_candidate(pool, scores)
+        t_full.append(time.perf_counter() - t0)
+        identical = identical and bool(np.array_equal(plan, pool[w]))
+        # realize the winning bit: the true state advances one window
+        st, g, _ = SS.step(jax.tree.map(jnp.asarray, state),
+                           jnp.int32(ig), jnp.asarray(C[i]),
+                           jnp.asarray(bool(plan[0])), s_max=s_max,
+                           collect="none")
+        state = jax.tree.map(np.asarray, st)
+        ig = int(g)
+
+    # warm numbers: drop each path's first (compile-bearing) sample
+    warm_delta_ms = (min(t_delta[1:] or t_delta) * 1e3
+                     if t_delta else None)
+    warm_full_ms = min(t_full[1:] or t_full) * 1e3
+    out = {
+        "K": K, "num_candidates": R, "I0": I0, "steps": steps,
+        "delta_steps": len(t_delta),
+        "full_steps": svc.stats["full"],
+        "invalidated": dict(svc.stats["invalidated"]),
+        "warm_delta_ms": warm_delta_ms,
+        "warm_full_rescan_ms": warm_full_ms,
+        "maintain_ms": (min(t_maintain[1:] or t_maintain) * 1e3
+                        if t_maintain else None),
+        "speedup_warm": (warm_full_ms / warm_delta_ms
+                         if warm_delta_ms else None),
+        "selection_identical": bool(identical),
+    }
+    print(f"replan: {out['delta_steps']}/{steps} delta, warm delta "
+          f"{warm_delta_ms and round(warm_delta_ms, 1)}ms vs full rescan "
+          f"{warm_full_ms:.1f}ms, maintain "
+          f"{out['maintain_ms'] and round(out['maintain_ms'], 1)}ms, "
+          f"selection_identical={bool(identical)}", flush=True)
     return out
 
 

@@ -1,7 +1,16 @@
-"""Serving example (deliverable b): batched autoregressive decoding with the
-framework's serve_step — greedy-decode a batch of requests against a reduced
-gemma3 (5:1 local:global) and a reduced mamba2 (SSM state) model, showing
-the same decode path the decode_32k / long_500k dry-run shapes lower.
+"""Persistent-jit serving loop: batched autoregressive decoding through
+one jitted `serve_step` compiled once and reused for every token of every
+request — the serving pattern this repo uses whenever a long-lived
+process answers a stream of same-shaped requests (`examples/
+serve_replan.py` builds the schedule-replanning service on the same idea;
+docs/replanning.md documents the pattern).
+
+Greedy-decodes a batch of prompts against reduced configs of three
+architectures (gemma3 with 5:1 local:global attention, mamba2 with SSM
+state, mixtral MoE). The decode state (KV cache / SSM state) stays on
+device across calls; each step feeds one token per request, and because
+every call sees identical shapes, the jit cache is hit from the second
+token on.
 
     PYTHONPATH=src python examples/serve_decode.py
 """

@@ -210,7 +210,7 @@ class FedSpaceScheduler(Scheduler):
 
     def __init__(self, regressor, *, I0: int = 24, n_min: int = None,
                  n_max: int = None, num_candidates: int = 5000,
-                 s_max: int = 8, seed: int = 0):
+                 s_max: int = 8, seed: int = 0, service=None):
         self.regressor = regressor
         self.I0 = I0
         self.n_min = n_min       # None => inferred from û (paper §3.2)
@@ -218,12 +218,31 @@ class FedSpaceScheduler(Scheduler):
         self.num_candidates = num_candidates
         self.s_max = s_max
         self.seed = seed
+        # optional repro.fl.replan.ReplanService: when attached, every
+        # re-plan routes through the service (persistent scan cache +
+        # regressor handoff) instead of a fresh fedspace_search call.
+        # Boundary-stride replans are full rescans either way, so routed
+        # runs are bit-identical to unrouted ones — the delta path pays
+        # off when the service is additionally driven per-window
+        # (examples/serve_replan.py, the `replan` benchmark section).
+        if service is not None and (service.I0 != I0
+                                    or service.s_max != s_max
+                                    or service.num_candidates
+                                    != num_candidates):
+            raise ValueError(
+                "ReplanService knobs must match the scheduler: service "
+                f"(I0={service.I0}, s_max={service.s_max}, "
+                f"R={service.num_candidates}) vs scheduler (I0={I0}, "
+                f"s_max={s_max}, R={num_candidates})")
+        self.service = service
         self.reset()
 
     def reset(self):
         self._rng = np.random.default_rng(self.seed)
         self._schedule: Optional[np.ndarray] = None
         self._window_start = -1
+        if self.service is not None:
+            self.service.invalidate("reset")
 
     def _window_link(self, link, i):
         """Slice the run-level link gate to the planning window [i, i+I0),
@@ -287,13 +306,25 @@ class FedSpaceScheduler(Scheduler):
                 K=Cw.shape[1])
             n_min = n_min if n_min is not None else inf_min
             n_max = n_max if n_max is not None else inf_max
-        self._schedule = fedspace_search(
-            self._rng, Cw,
-            self._search_state(state, i, connectivity=connectivity,
-                               link=link),
-            ig, self.regressor, status, n_min=n_min, n_max=n_max,
-            num_candidates=self.num_candidates, s_max=self.s_max,
-            link=self._window_link(link, i), mesh=self.mesh)
+        search_state = self._search_state(state, i,
+                                          connectivity=connectivity,
+                                          link=link)
+        if self.service is not None:
+            # route through the replan service: same draw (the scheduler's
+            # rng), same scorer, same selection — bit-identical schedules —
+            # but the service keeps the scan cache and the regressor across
+            # requests (docs/replanning.md)
+            self.service.mesh = self.mesh
+            self._schedule = self.service.replan(
+                i, Cw, search_state, ig, status,
+                link=self._window_link(link, i), rng=self._rng,
+                n_min=n_min, n_max=n_max)
+        else:
+            self._schedule = fedspace_search(
+                self._rng, Cw, search_state, ig, self.regressor, status,
+                n_min=n_min, n_max=n_max,
+                num_candidates=self.num_candidates, s_max=self.s_max,
+                link=self._window_link(link, i), mesh=self.mesh)
         self._window_start = i
 
     def decide(self, i, *, n_in_buffer, K, state, ig, connectivity, status,

@@ -88,6 +88,57 @@ def _simulate_marks(C_window, candidates, state, ig, link, *, s_max: int,
 
 
 @functools.partial(jax.jit, static_argnames=("s_max",))
+def _simulate_marks_state(C_window, candidates, state, ig, link, *,
+                          s_max: int):
+    """`_simulate_marks` variant that also returns each candidate's final
+    scan state and global version — the per-candidate frontier the
+    incremental replanner (`repro.fl.replan.ReplanService`) caches so the
+    next replan can simulate only the newly revealed window. The marks
+    themselves are value-identical to `_simulate_marks` (same transitions,
+    extra outputs), which is what keeps delta-scored schedules bit-equal
+    to a full rescan. Single-device only: the replan cache is not built
+    under a satellite-axis mesh (`score_candidates(mesh=...)` remains the
+    sharded full-rescan path)."""
+    fstate, fig, infos = SS.simulate_candidates(C_window, candidates,
+                                                state, ig, s_max=s_max,
+                                                collect="marks", link=link)
+    return infos["marks"], fstate, fig
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
+def step_candidates(states, igs, connected, bits, link, *, s_max: int):
+    """One protocol window vmapped over per-candidate *states* — the
+    delta-scan transition for a newly revealed window.
+
+    `_simulate_marks` vmaps candidate schedules over one shared initial
+    state; here every candidate carries its own frontier state/version
+    (the scan state cached from the previous replan), takes its own
+    aggregation bit for the revealed window, and shares the window's
+    connectivity column and link gate. Built on the same
+    `repro.core.staleness.step` composition as the scan, so the emitted
+    marks — and the advanced states — are bit-identical to what a full
+    rescan would compute at its last window.
+
+    Args:
+      states: stacked `SatState`, leading axis R (any signed-int dtype).
+      igs: (R,) per-candidate global version, same dtype as the states.
+      connected: (K,) bool — the revealed window's connectivity column.
+      bits: (R,) {0,1} — each candidate's aggregation bit at that window.
+      link: optional `LinkGate` with a (K,) grant shared by every
+        candidate, or None.
+      s_max: staleness clip (static).
+
+    Returns (marks (R, K), new_states, new_igs).
+    """
+    def one(st, g, a):
+        return SS.step(st, g, connected, a.astype(bool), s_max=s_max,
+                       collect="marks", link=link)
+
+    st, g, info = jax.vmap(one)(states, igs, bits)
+    return info["marks"], st, g
+
+
+@functools.partial(jax.jit, static_argnames=("s_max",))
 def _event_features(marks, idx, status, *, s_max: int):
     """Gather the (R, I0, K) staleness marks at each candidate's
     aggregation windows, histogram them, and featurize: (R*n_cap, F)
@@ -202,6 +253,70 @@ def score_candidates(candidates: np.ndarray, C_window: np.ndarray,
         scores[rows] = np.asarray(
             (util * jnp.asarray(mask[rows], jnp.float32)).sum(axis=1))
     return scores
+
+
+def scan_candidates(candidates: np.ndarray, C_window: np.ndarray,
+                    state: SS.SatState, ig: int, regressor, status: float,
+                    *, s_max: int = 8, chunk_rows: Optional[int] = None,
+                    link: Optional[SS.LinkGate] = None):
+    """`score_candidates`' device pipeline, additionally materializing the
+    per-candidate scan artifacts the incremental replanner caches
+    (`repro.fl.replan.ReplanService` — see `docs/replanning.md`).
+
+    Scores are bit-identical to `score_candidates` on the same inputs:
+    the marks come from the same transitions (`_simulate_marks_state` only
+    adds outputs), the per-event utilities from the same
+    histogram/featurize/predict pipeline, and the final masked reduction
+    runs at the same (R, n_cap) shape. The regressor must expose
+    `predict_device` (there is no legacy `.predict` fallback here — a
+    host-path regressor has no cacheable device artifacts).
+
+    Returns (scores (R,) float32, artifacts) where artifacts is a dict:
+      win_util: (R, I0) float32 — each candidate's predicted per-event
+        utility placed at its aggregation offsets (0 elsewhere; padded
+        event slots land on a=0 offsets by construction, so real events
+        are never overwritten).
+      end_state: host-numpy stacked `SatState`, leading axis R — each
+        candidate's scan state after the last window (the frontier the
+        next delta step advances from).
+      end_ig: (R,) per-candidate final global version (scan dtype).
+      state_dtype: the narrowed scan dtype (np.int16 or np.int32) — the
+        delta path's narrowing-guard check compares against it.
+    """
+    cands = np.asarray(candidates)
+    R, I0 = cands.shape
+    K = C_window.shape[1]
+    if link is not None:
+        link = SS.LinkGate(jnp.asarray(np.asarray(link.grant), jnp.int32),
+                           jnp.int32(link.need_up), jnp.int32(link.need_dn))
+    idx, mask = event_positions(cands)
+    Cw = jnp.asarray(np.asarray(C_window, bool))
+    st, igd = _narrow_state(state, int(ig), I0)
+    if chunk_rows is None:
+        chunk_rows = max(256, (64 << 20) // max(I0 * K, 1))
+    scores = np.empty(R, np.float32)
+    win_util = np.zeros((R, I0), np.float32)
+    end_states, end_igs = [], []
+    predict_device = regressor.predict_device
+    for c0 in range(0, R, chunk_rows):
+        rows = slice(c0, min(c0 + chunk_rows, R))
+        marks, fstate, fig = _simulate_marks_state(
+            Cw, jnp.asarray(cands[rows]), st, igd, link, s_max=s_max)
+        feats = _event_features(marks, jnp.asarray(idx[rows]),
+                                jnp.float32(status), s_max=s_max)
+        util = predict_device(feats).reshape(-1, idx.shape[1])
+        masked = util * jnp.asarray(mask[rows], jnp.float32)
+        scores[rows] = np.asarray(masked.sum(axis=1))
+        np.put_along_axis(win_util[rows], idx[rows], np.asarray(masked),
+                          axis=1)
+        end_states.append(jax.tree.map(np.asarray, fstate))
+        end_igs.append(np.asarray(fig))
+    end_state = jax.tree.map(lambda *xs: np.concatenate(xs), *end_states)
+    return scores, {"win_util": win_util, "end_state": end_state,
+                    "end_ig": np.concatenate(end_igs),
+                    "state_dtype": np.dtype(np.int16)
+                    if st.version.dtype == jnp.int16
+                    else np.dtype(np.int32)}
 
 
 def infer_n_range(regressor, uploads_per_window: float, I0: int,

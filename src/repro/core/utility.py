@@ -68,6 +68,71 @@ def featurize_jnp(hist, status):
                           s_max=hist.shape[-1] - 1)
 
 
+def n_features(s_max: int) -> int:
+    """Width of `featurize`'s output: the raw histogram (s_max+1) plus
+    total count, staleness-compensated fresh mass, mean staleness, and the
+    training status T. Depends only on `s_max`, never on K — which is what
+    makes a fitted regressor transferable across constellations."""
+    return s_max + 5
+
+
+def transfer_ready(regressor, *, s_max: int = 8) -> bool:
+    """Forest-transfer predicate: True when `regressor` can serve eq.-13
+    schedule searches on *any* constellation at this `s_max` without
+    refitting. The featurization is K-agnostic by construction (histogram
+    counts scale with K, the feature semantics don't — paper §3.2), so the
+    hard requirements are a matching feature width (when the regressor
+    records one at fit time) and a device prediction path (the search and
+    the replan service stay on device end-to-end)."""
+    nf = getattr(regressor, "n_features_", None)
+    if nf is not None and int(nf) != n_features(s_max):
+        return False
+    return callable(getattr(regressor, "predict_device", None))
+
+
+def transfer_report(regressor, feats) -> dict:
+    """Cross-constellation evaluation: how a feature batch from a *other*
+    constellation than the fit (e.g. flock191-fitted û asked about
+    starlink400 histograms) sits relative to the regressor's training
+    envelope, plus a prediction summary.
+
+    Tree ensembles extrapolate as constants beyond their training
+    envelope — out-of-envelope counts from a larger K saturate the
+    fresh-mass/total splits rather than exploding — so `in_envelope` below
+    1.0 flags *reduced resolution*, not invalid predictions. Returns:
+      rows, finite (inputs all finite), in_envelope (fraction of feature
+      values inside the per-feature fit range; only when the regressor
+      recorded one), out_features (feature indices with any value outside
+      the envelope), pred_min/pred_max/pred_finite.
+    """
+    X = np.asarray(feats, np.float32)
+    if X.ndim == 1:
+        X = X[None, :]
+    out = {"rows": int(X.shape[0]),
+           "finite": bool(np.isfinite(X).all())}
+    lo = getattr(regressor, "feature_low_", None)
+    hi = getattr(regressor, "feature_high_", None)
+    if lo is not None and hi is not None:
+        inside = (X >= lo) & (X <= hi)
+        out["in_envelope"] = float(inside.mean())
+        out["out_features"] = [int(j) for j in
+                               np.flatnonzero(~inside.all(axis=0))]
+    preds = np.asarray(regressor.predict(X))
+    out["pred_min"] = float(preds.min())
+    out["pred_max"] = float(preds.max())
+    out["pred_finite"] = bool(np.isfinite(preds).all())
+    return out
+
+
+def _record_envelope(regressor, X):
+    """Remember the fit's feature geometry (width + per-feature range) so
+    `transfer_ready` / `transfer_report` can reason about serving other
+    constellations. Pure metadata — predictions are untouched."""
+    regressor.n_features_ = int(X.shape[1])
+    regressor.feature_low_ = X.min(axis=0)
+    regressor.feature_high_ = X.max(axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Random forest (numpy CART ensemble)
 
@@ -224,6 +289,7 @@ class RandomForestRegressor:
             self.trees.append(self._build(X[boot], y[boot], rng))
         self._arrays = None
         self._device_arrays = None
+        _record_envelope(self, X)
         return self
 
     def arrays(self) -> ForestArrays:
@@ -293,6 +359,7 @@ class MLPRegressor:
         y = np.asarray(y, np.float32)
         self.mu, self.sd = X.mean(0), X.std(0) + 1e-6
         self.ymu, self.ysd = y.mean(), y.std() + 1e-9
+        _record_envelope(self, X)
         Xn = (X - self.mu) / self.sd
         yn = (y - self.ymu) / self.ysd
         k = jax.random.PRNGKey(self.seed)

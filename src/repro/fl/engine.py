@@ -301,8 +301,11 @@ class SimResult:
     `idle_connections`/`total_connections` (eq.-10 idleness accounting),
     `num_global_updates` (aggregations), `num_aggregated_gradients`,
     `windows_run`, and `time_to_target_days`/`target_acc` when a target
-    accuracy was set. `days(window)` converts a window index to simulated
-    days; `summary()` returns the JSON-friendly digest."""
+    accuracy was set. `replan_stats` carries the `ReplanService` counters
+    (full vs delta replans, invalidation reasons) when the scheduler
+    routes eq.-13 searches through one. `days(window)` converts a window
+    index to simulated days; `summary()` returns the JSON-friendly
+    digest."""
     scheme: str
     accuracy: List[float] = field(default_factory=list)
     val_loss: List[float] = field(default_factory=list)
@@ -315,6 +318,7 @@ class SimResult:
     windows_run: int = 0
     time_to_target_days: Optional[float] = None
     target_acc: Optional[float] = None
+    replan_stats: Optional[dict] = None
 
     def days(self, window: int) -> float:
         """Simulated days elapsed at `window` (T0 = 15-minute windows)."""
@@ -333,6 +337,7 @@ class SimResult:
             "total_connections": self.total_connections,
             "staleness_hist": (self.staleness_hist.tolist()
                                if self.staleness_hist is not None else None),
+            "replan_stats": self.replan_stats,
         }
 
 
@@ -706,6 +711,13 @@ class SimulationEngine:
                 if stop or self._stop_requested:
                     break
         finally:
+            service = getattr(self.scheduler, "service", None)
+            if service is not None:
+                self.result.replan_stats = {
+                    "full": service.stats["full"],
+                    "delta": service.stats["delta"],
+                    "invalidated": dict(service.stats["invalidated"]),
+                }
             # always emitted (even on a mid-run exception) so callbacks
             # holding resources — open files, sockets — can release them
             self._emit("on_run_end", self.result)

@@ -70,6 +70,30 @@ def test_anchor_resolves(doc, path, name):
             f"{doc}: anchor class {cls} not defined in {path}"
 
 
+def test_no_orphan_docs():
+    """Every page in docs/ must be reachable from docs/index.md — a page
+    nobody links is a page nobody reads, and it rots."""
+    index = _read("docs/index.md")
+    orphans = [os.path.basename(d) for d in DOC_FILES
+               if d.startswith("docs/")
+               and os.path.basename(d) != "index.md"
+               and os.path.basename(d) not in index]
+    assert not orphans, f"docs not linked from docs/index.md: {orphans}"
+
+
+def test_cross_doc_links_resolve():
+    """Every `docs/*.md` reference inside a doc page must point at a page
+    that exists (stale cross-links are the docs equivalent of a dangling
+    pointer)."""
+    ref_re = re.compile(r"docs/[\w-]+\.md")
+    stale = []
+    for doc in DOC_FILES:
+        for ref in set(ref_re.findall(_read(doc))):
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                stale.append((doc, ref))
+    assert not stale, f"stale cross-doc links: {stale}"
+
+
 def test_equation_map_is_complete():
     """The docs system must keep covering the paper constructs the issue
     tracker promised: eq. 2, eq. 4, eq. 13, and Algorithm 1."""

@@ -284,7 +284,7 @@ def test_hotpaths_registers_all_sections_with_parity_gates():
     hp = pytest.importorskip("benchmarks.hotpaths")
     expected = {"search_replan", "search_scaling", "aggregation_round",
                 "window_loop", "utility_sampler", "link_budget", "isl",
-                "faults", "sweep_scaling", "payloads"}
+                "faults", "sweep_scaling", "payloads", "replan"}
     assert expected <= set(hp.SECTIONS)
     for name in expected:
         fn, parity = hp.SECTIONS[name]

@@ -97,6 +97,59 @@ def test_preset_completes_engine_run(worlds, preset, scheduler):
         assert 0 <= res.num_global_updates <= 2
 
 
+@pytest.mark.parametrize("preset", ["starlink40", "starlink120",
+                                    "starlink400"])
+def test_forest_transfer_across_constellations(worlds, preset):
+    """The replan-service handoff: a forest fitted at flock191 scale must
+    be servable on every other constellation — the featurization is
+    K-agnostic (width `n_features(s_max)` regardless of satellite count),
+    features stay finite and in-range, and the transfer predicate/report
+    agree (see repro.fl.replan)."""
+    from repro.core.staleness import bootstrap_state, simulate_window
+    from repro.core.utility import (n_features, transfer_ready,
+                                    transfer_report)
+    import jax.numpy as jnp
+
+    s_max = 8
+    rf = _tiny_regressor(s_max)           # "flock191 calibration" scale
+    assert transfer_ready(rf, s_max=s_max)
+    assert rf.n_features_ == n_features(s_max)
+
+    fed = worlds(preset)
+    C = fed.C
+    K = C.shape[1]
+    a = (np.arange(C.shape[0]) % 3 == 2).astype(np.int32)
+    _, _, infos = simulate_window(jnp.asarray(C), jnp.asarray(a),
+                                  bootstrap_state(K), jnp.int32(0),
+                                  s_max=s_max, collect="hist")
+    hists = np.asarray(infos["hist"]).astype(np.float32)
+    X = featurize(hists, 1.0)
+    assert X.shape == (C.shape[0], n_features(s_max))   # K-agnostic width
+    assert np.isfinite(X).all()
+    mean_stale = X[:, s_max + 3]
+    assert ((mean_stale >= 0) & (mean_stale <= s_max)).all()
+
+    rep = transfer_report(rf, X)
+    assert rep["rows"] == C.shape[0] and rep["finite"]
+    assert 0.0 <= rep["in_envelope"] <= 1.0
+    assert rep["pred_finite"]             # saturating trees, never NaN
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_infer_n_range_valid_on_every_preset(worlds, preset):
+    """`infer_n_range` must produce usable candidate-draw bounds from any
+    preset's real connectivity statistics."""
+    from repro.core.search import infer_n_range
+
+    fed = worlds(preset)
+    C = fed.C
+    I0 = 24
+    uploads = float(C.mean()) * C.shape[1]
+    lo, hi = infer_n_range(_tiny_regressor(), uploads, I0, 1.0,
+                           s_max=8, K=C.shape[1])
+    assert 1 <= lo <= hi <= I0 // 2
+
+
 def test_ground_networks_change_connectivity():
     dense = CN.connectivity_sets(
         CN.constellation_preset("starlink40"), days=0.125)
